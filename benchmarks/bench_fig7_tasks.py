@@ -1,0 +1,81 @@
+"""Fig. 7 / Table I: the five tasks end-to-end — accuracy, gating skip rate,
+and modeled power at the chip's operating point (core/energy.py).
+
+Paper claims validated *relatively* (DESIGN.md §3): DSST at 80 % sparsity
+cuts learn/infer energy vs dense with small accuracy cost; IA/SS gating cuts
+WU energy beyond zero-skipping; all-task modeled power < 50 µW @ 0.6 V.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dsst import DSSTConfig
+from repro.core.energy import OperatingPoint, report
+from repro.core.gating import GatingConfig, skip_rate
+from repro.core.snn import (SNNConfig, accuracy, init_params, init_state,
+                            make_eval_fn, make_train_fn)
+from repro.data.events import TASK_NAMES, make_task
+
+PAPER_POWER_UW = {"gesture": (32.3, 49.2), "nmnist": (28.7, 42.9),
+                  "shd_kws": (25.1, 40.5), "eeg_emotion": (20.3, 31.2),
+                  "nav_cue": (17.6, 27.8)}
+
+
+def _train_eval(task, cfg, steps, batch=16, seed=0):
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    state = init_state(cfg, batch=batch)
+    step = make_train_fn(cfg)
+    rng = np.random.default_rng(seed + 1)
+    sop_f = sop_w = sop_off = 0.0
+    t0 = time.perf_counter()
+    for i in range(steps):
+        ev, lab = task.sample(rng, batch)
+        params, state, m = step(params, state, jnp.asarray(ev), jnp.asarray(lab))
+        sop_f += float(m.sop_forward)
+        sop_w += float(m.sop_wu)
+        sop_off += float(m.sop_wu_offered)
+    dt = (time.perf_counter() - t0) / steps * 1e6
+    ef = make_eval_fn(cfg)
+    ev, lab = task.sample(np.random.default_rng(9999), 128)
+    st_e = init_state(cfg, batch=128)
+    _, me = ef(params, st_e, jnp.asarray(ev))
+    acc = float(accuracy(me.logits, jnp.asarray(lab)))
+    n_ts = steps * cfg.t_steps
+    learn = report(sop_f / steps / batch, sop_w / steps / batch,
+                   sop_off / steps / batch, cfg.t_steps)
+    infer = report(float(me.sop_forward) / 128, 0, 0, cfg.t_steps)
+    return {"acc": acc, "us_per_sample": dt / batch,
+            "learn_uW": learn.power_w * 1e6, "infer_uW": infer.power_w * 1e6,
+            "wu_skip": learn.wu_skip_rate, "gate_skip": float(skip_rate(state.gate))}
+
+
+def run(quick: bool = True):
+    steps = 100 if quick else 300
+    n_in, t_steps = 64, 20           # reduced chip (full 512x50 in examples/)
+    rows = []
+    for name in TASK_NAMES:
+        task = make_task(name, n_in=n_in, t_steps=t_steps)
+        n_out = max(task.n_classes, 4)
+        base = dict(n_in=n_in, n_hidden=64, n_out=n_out, t_steps=t_steps,
+                    dsst=DSSTConfig(period=10, prune_frac=0.25))
+        sparse = _train_eval(task, SNNConfig(**base), steps)
+        dense = _train_eval(task, SNNConfig(dense=True, **base), steps)
+        nogate = _train_eval(
+            task, SNNConfig(gating=GatingConfig(enabled=False), **base), steps)
+        p_inf, p_learn = PAPER_POWER_UW[name]
+        rows.append({
+            "name": f"fig7/{name}", "us_per_call": sparse["us_per_sample"],
+            "derived": (f"acc={sparse['acc']:.3f};acc_dense={dense['acc']:.3f};"
+                        f"learn_uW={sparse['learn_uW']:.1f};"
+                        f"infer_uW={sparse['infer_uW']:.1f};"
+                        f"paper_uW={p_inf}/{p_learn};"
+                        f"learn_power_cut_vs_dense="
+                        f"{1 - sparse['learn_uW'] / dense['learn_uW']:.2f};"
+                        f"gating_power_cut_vs_zk="
+                        f"{1 - sparse['learn_uW'] / max(nogate['learn_uW'], 1e-9):.2f};"
+                        f"wu_skip={sparse['wu_skip']:.2f}")})
+    return rows

@@ -1,0 +1,47 @@
+"""Table I: SoTA comparison — our modeled numbers in the paper's metrics
+next to the published figures for ElfCore and its competitors.
+
+Measured-on-silicon values can't be reproduced on CPU; what we *can* compute
+exactly are the structural quantities (memory cut, NCE, SOP counts) and the
+modeled power from counted events × the paper's energy constants.
+"""
+from __future__ import annotations
+
+from repro.core import sparsity as sp
+from repro.core.energy import network_capacity_efficiency
+
+PAPER = {
+    # name: (neurons_scale, area_mm2, pj_per_sop, nce_published)
+    "elfcore": (None, 0.62, 2.4, 1926),
+    "anp_i_isscc23": (None, 1.25, 1.5, 825),
+    "reckon_isscc22": (None, 0.45, 5.3, 328),
+}
+
+
+def run(quick: bool = True):
+    rows = []
+    # --- memory cut at the chip's own scale (512-512-512-16, 80% sparse)
+    spec = sp.paper_spec_4groups(512, 0.8)
+    bits_h1 = sp.memory_bits(512, 512, spec, weight_bits=8)
+    dense_total = 2 * bits_h1["dense_bits"] + 2 * 512 * 16 * 8
+    sparse_total = 2 * bits_h1["compact_bits"] + 2 * 512 * 16 * 8
+    rows.append({"name": "table1/weight_memory_cut", "us_per_call": 0.0,
+                 "derived": (f"value_only_cut={spec.sparsity:.2f};"
+                             f"with_index_cut={1 - sparse_total / dense_total:.2f};"
+                             f"paper_claim=3.8x_vs_sota=~{1 - 1 / 3.8:.2f}")})
+
+    # --- NCE: back out the implied NN-scale from the published NCEs, then
+    # verify our formula reproduces the published ordering and ratios.
+    for name, (_, area, pj, nce_pub) in PAPER.items():
+        implied_scale = nce_pub * area * pj
+        ours = network_capacity_efficiency(implied_scale, area, pj)
+        rows.append({"name": f"table1/nce_{name}", "us_per_call": 0.0,
+                     "derived": f"published={nce_pub};formula_roundtrip={ours:.0f}"})
+
+    # --- energy-efficiency ratios the paper headlines
+    rows.append({"name": "table1/headline_ratios", "us_per_call": 0.0,
+                 "derived": ("infer_energy_vs_isscc24=16x(paper);"
+                             "learn_power_vs_isscc22=4.1x(paper);"
+                             "mem_saving_same_scale=3.8x(paper);"
+                             "our_modeled_uW=see_fig7_rows")})
+    return rows

@@ -1,0 +1,133 @@
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms per (arch × shape × mesh), seconds per step, TPU v5e constants:
+
+    compute    = HLO_FLOPs_global / (chips × 197e12)      [bf16 MXU peak]
+    memory     = HLO_bytes_per_device / 819e9             [HBM BW]
+    collective = wire_bytes_per_device / 50e9             [per-link ICI BW]
+
+``HLO_FLOPs_global = flops_per_device × chips`` (cost_analysis reports the
+per-device SPMD module; probe-corrected for scan bodies, see dryrun.py).
+Wire bytes use the ring model per collective (dryrun.parse_collectives).
+
+Derived:
+* MODEL_FLOPS = 6·N_active·tokens (train) / 2·N_active·tokens (prefill,
+  decode) — the "useful" flops;
+* utilisation = MODEL_FLOPS / HLO_FLOPs_global (catches remat/redundancy);
+* bound = max(compute, memory, collective): the step-time floor;
+* MFU_bound = (MODEL_FLOPS / (chips·peak)) / bound — the MFU the step would
+  achieve *at* its binding roofline: the score we hillclimb in §Perf.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+_ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def model_flops(arch: str, shape: str) -> float:
+    import repro.configs as C
+    cfg = C.get_config(C.normalize(arch.replace("-", "_")))
+    n = cfg.active_param_count()
+    sh = C.SHAPES[shape]
+    if sh.kind == "train":
+        return 6.0 * n * sh.tokens
+    if sh.kind == "prefill":
+        return 2.0 * n * sh.tokens
+    return 2.0 * n * sh.global_batch      # decode: one token per sequence
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    if "skipped" in rec:
+        return None
+    chips = rec["n_devices"]
+    flops_global = rec["flops_per_device"] * chips
+    compute = flops_global / (chips * PEAK_FLOPS)
+    memory = rec["bytes_per_device"] / HBM_BW
+    coll = rec["collective_wire_bytes_per_device"] / ICI_BW
+    mf = model_flops(rec["arch"], rec["shape"])
+    bound = max(compute, memory, coll)
+    dom = ("compute" if bound == compute else
+           "memory" if bound == memory else "collective")
+    util = mf / flops_global if flops_global else 0.0
+    mfu_bound = (mf / (chips * PEAK_FLOPS)) / bound if bound else 0.0
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": dom, "model_flops": mf, "hlo_flops_global": flops_global,
+        "useful_ratio": util, "mfu_bound": mfu_bound,
+        "mem_per_dev_GB": rec.get("memory", {}).get("peak_estimate_bytes", 0) / 1e9,
+    }
+    out["lever"] = _lever(out)
+    return out
+
+
+def _lever(r: Dict) -> str:
+    if r["dominant"] == "collective":
+        return ("shrink TP payloads (comm-avoiding sharding / gradient "
+                "compression on the DP axis) or overlap collectives with MXU work")
+    if r["dominant"] == "memory":
+        if "decode" in r["shape"] or r["shape"] == "long_500k":
+            return ("decode is weight/KV-streaming bound: shrink resident bytes "
+                    "(N:M compact weights, KV window/quantisation) or raise batch")
+        return ("cut HBM traffic: fuse softmax/loss chunks, avoid f32 logit "
+                "materialisation, rematerialise less")
+    return "already MXU-bound: raise useful_ratio (less remat/redundant compute)"
+
+
+def load_all(art_dir: str = _ART, tag: str = "") -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        base = os.path.basename(f)[:-5]
+        parts = base.split("__")
+        if tag and (len(parts) < 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) > 3:
+            continue
+        r = analyze(json.load(open(f)))
+        if r:
+            rows.append(r)
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
+           "| dominant | useful | MFU@bound | mem/dev GB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        body += (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                 f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+                 f"| {r['collective_s']*1e3:.2f} | **{r['dominant']}** "
+                 f"| {r['useful_ratio']:.2f} | {r['mfu_bound']*100:.1f}% "
+                 f"| {r['mem_per_dev_GB']:.1f} |\n")
+    return hdr + body
+
+
+def run(quick: bool = True):
+    out = []
+    for tag in ("", "opt"):
+        for r in load_all(tag=tag):
+            label = f"roofline{'_' + tag if tag else ''}"
+            out.append({"name": f"{label}/{r['arch']}/{r['shape']}/{r['mesh']}",
+                        "us_per_call": max(r["compute_s"], r["memory_s"],
+                                           r["collective_s"]) * 1e6,
+                        "derived": (f"dom={r['dominant']};"
+                                    f"mfu_bound={r['mfu_bound']:.3f};"
+                                    f"mem_dev_GB={r['mem_per_dev_GB']:.1f}")})
+    return out
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    rows = load_all(tag=sys.argv[1] if len(sys.argv) > 1 else "")
+    print(markdown_table(rows))

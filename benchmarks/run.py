@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure + the roofline.
+
+``PYTHONPATH=src python -m benchmarks.run [--full]`` prints
+``name,us_per_call,derived`` CSV. Modules:
+
+  fig3  — async SerDes functional stand-in (packing/delay buffer)
+  fig4  — OSSL ablations (PC/CC/depth/WU-locking)
+  fig5  — DSST factorized sorting + accuracy restoration
+  fig6  — input-stationary sparse forward path
+  fig7  — five tasks: accuracy + modeled µW vs paper numbers
+  table1— memory cut / NCE / headline ratios
+  roofline — per-(arch×shape×mesh) terms from dry-run artifacts (if present)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="longer training runs")
+    ap.add_argument("--only", default="", help="comma list of module names")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (bench_fig3_serdes, bench_fig4_ossl, bench_fig5_dsst,
+                   bench_fig6_datapath, bench_fig7_tasks, bench_kernels,
+                   bench_table1, roofline)
+    modules = {
+        "fig3": bench_fig3_serdes, "fig4": bench_fig4_ossl,
+        "fig5": bench_fig5_dsst, "fig6": bench_fig6_datapath,
+        "fig7": bench_fig7_tasks, "table1": bench_table1,
+        "kernels": bench_kernels, "roofline": roofline,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = {k: v for k, v in modules.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for key, mod in modules.items():
+        try:
+            for row in mod.run(quick=quick):
+                print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+        except Exception:
+            failed += 1
+            print(f"{key},0.00,ERROR", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Fault-tolerance drill: kill the training 'fleet' twice, watch it resume
+bitwise-identically from checkpoints; flag a straggling replica.
+
+    PYTHONPATH=src python examples/elastic_recovery_demo.py
+"""
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+import repro.configs as C                                       # noqa: E402
+from repro.data.pipeline import PipelineConfig, synthetic_lm_batch  # noqa: E402
+from repro.launch.train import TrainHParams, init_train_state, make_train_step  # noqa: E402
+from repro.optim import AdamWConfig                             # noqa: E402
+from repro.runtime.fault_tolerance import (HeartbeatMonitor,    # noqa: E402
+                                           run_with_recovery)
+
+
+def main():
+    cfg = C.get_reduced("phi3_medium_14b")
+    hp = TrainHParams(opt=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100))
+    pcfg = PipelineConfig(vocab=cfg.vocab, seq_len=32, global_batch=4)
+    step_jit = jax.jit(make_train_step(cfg, hp))
+
+    def step_fn(state, step):
+        params, opt, ss = state
+        batch = {k: jnp.asarray(v)
+                 for k, v in synthetic_lm_batch(pcfg, step).items()}
+        params, opt, ss, m = step_jit(params, opt, ss, batch)
+        return (params, opt, ss), {"loss": float(m["loss"])}
+
+    init = init_train_state(jax.random.PRNGKey(0), cfg, hp)
+
+    with tempfile.TemporaryDirectory() as d1, tempfile.TemporaryDirectory() as d2:
+        print("reference run (no failures)...")
+        ref, _ = run_with_recovery(step_fn, init, 30, d1, ckpt_every=10)
+        print("faulty run: nodes lost at steps 12 and 23...")
+        out, log = run_with_recovery(step_fn, init, 30, d2, ckpt_every=10,
+                                     fail_at={12: 1, 23: 1})
+        print(f"  restarts: {log['restarts']}, restored from {log['restored_from']}")
+        same = all(bool(jnp.array_equal(a, b)) for a, b in
+                   zip(jax.tree.leaves(ref), jax.tree.leaves(out)))
+        print(f"  final states bitwise identical: {same}")
+        assert same
+
+    mon = HeartbeatMonitor(8)
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        for r in range(8):
+            mon.record(r, (2.4 if r == 3 else 1.0) + rng.normal() * 0.02)
+    print(f"straggler policy flags replicas: {mon.stragglers()} (injected: [3])")
+
+
+if __name__ == "__main__":
+    main()

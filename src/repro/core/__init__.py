@@ -1,0 +1,14 @@
+"""ElfCore's three contributions as composable JAX modules.
+
+* :mod:`repro.core.sparsity` — N:M structured masks (element + MXU-block).
+* :mod:`repro.core.dsst`     — dynamic prune/regrow with factorized sorting.
+* :mod:`repro.core.ossl`     — local predictive+contrastive learning.
+* :mod:`repro.core.gating`   — activity-dependent weight-update gating.
+* :mod:`repro.core.snn`      — the paper-faithful chip network (LIF, traces).
+* :mod:`repro.core.energy`   — SOP-count → µW model (paper constants).
+"""
+from .sparsity import NMSpec, paper_spec_4groups  # noqa: F401
+from .dsst import DSSTConfig, DSSTAccumulator  # noqa: F401
+from .gating import GatingConfig  # noqa: F401
+from .ossl import OSSLConfig  # noqa: F401
+from .snn import SNNConfig  # noqa: F401

@@ -1,0 +1,226 @@
+"""Dynamic Structured Sparse Training (DSST) — ElfCore §II-C/D.
+
+Sparse-to-sparse training: the network *starts* at uniform N:M sparsity and,
+every ``period`` weight-update cycles, **prunes the k smallest-magnitude
+active connections and regrows k inactive connections with the largest
+gradient magnitude**, executed per N:M group so the exactly-N-per-group
+invariant is preserved (and with it the compact SRAM layout).
+
+Two regrow scorers:
+
+* :func:`prune_regrow` — dense-oracle: any dense [K, O] gradient-magnitude
+  score (what RigL [13] does, and our correctness reference).
+
+* :func:`prune_regrow_factored` — the paper's contribution: for masked
+  (never-materialised) weights the gradient of ``y = x @ w`` factors as
+  ``g_ij = pre_i * post_j``. Within one N:M group of one output neuron the
+  ``post_j`` factor is constant, so the regrow *ranking* along the group is
+  the ranking of ``|pre_i|`` — computed **once per group, reused across every
+  output neuron** ("reduces sorting complexity from the synapse to the neuron
+  level", Fig. 5). We implement exactly that reuse: one sort of ``|pre|`` per
+  group, then a gather per output column.
+
+Both keep O(1) extra state (the chip's heap property) — JAX's ``top_k`` is
+the XLA analogue of the five parallel sorting blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .sparsity import NMSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class DSSTConfig:
+    period: int = 100          # WU cycles between connectivity updates
+    prune_frac: float = 0.3    # fraction of each group's n connections recycled
+    start_step: int = 0        # no connectivity updates before this
+    stop_step: int = 10**9     # freeze connectivity after this (RigL-style cool-down)
+    frac_decay: float = 1.0    # multiplicative decay of prune_frac per event
+
+    def k_per_group(self, spec: NMSpec, step: int = 0) -> int:
+        """Static (trace-safe) number of connections recycled per group."""
+        events = max(0, step - self.start_step) // max(1, self.period)
+        frac = self.prune_frac * (self.frac_decay ** events)
+        k = int(round(spec.n * frac))
+        return max(0, min(k, spec.n - 1))
+
+    def is_update_step(self, step) -> jax.Array:
+        step = jnp.asarray(step)
+        return ((step >= self.start_step)
+                & (step < self.stop_step)
+                & (step % self.period == self.period - 1))
+
+
+class DSSTStats(NamedTuple):
+    """Telemetry for EXPERIMENTS.md / energy model."""
+    pruned: jax.Array      # connections recycled this event
+    regrown: jax.Array
+    mask_change: jax.Array  # fraction of units whose state flipped
+
+
+def _grouped(x: jax.Array, spec: NMSpec) -> jax.Array:
+    kb, j = x.shape
+    return x.reshape(kb // spec.m, spec.m, j)
+
+
+def prune_regrow(
+    unit_mask: jax.Array,          # bool [KB, J]
+    weight_score: jax.Array,       # [KB, J]  |w| summarised to units (prune key)
+    grad_score: jax.Array,         # [KB, J]  |g| summarised to units (regrow key)
+    spec: NMSpec,
+    k: int,
+) -> tuple[jax.Array, DSSTStats]:
+    """One DSST event with a dense regrow oracle. Keeps exactly n per group.
+
+    Prune: among the n active units of each (group, out-tile), drop the ``k``
+    with smallest weight_score. Regrow: among the m-n inactive units, add the
+    ``k`` with largest grad_score. Active/inactive sets are disjoint so the
+    invariant is structural, not checked at runtime.
+    """
+    if k == 0:
+        z = jnp.zeros((), jnp.int32)
+        return unit_mask, DSSTStats(z, z, jnp.zeros(()))
+    if k >= spec.n:
+        raise ValueError(f"k={k} must be < n={spec.n}")
+    gm_mask = _grouped(unit_mask, spec)
+    gm_w = _grouped(weight_score, spec)
+    gm_g = _grouped(grad_score, spec)
+
+    neg_inf = jnp.asarray(-jnp.inf, gm_w.dtype)
+    # survivors: top (n-k) of active by weight score
+    keep_key = jnp.where(gm_mask, gm_w, neg_inf)
+    _, keep_idx = jax.lax.top_k(jnp.moveaxis(keep_key, 1, -1), spec.n - k)
+    # regrown: top k of inactive by grad score
+    grow_key = jnp.where(gm_mask, neg_inf, gm_g)
+    _, grow_idx = jax.lax.top_k(jnp.moveaxis(grow_key, 1, -1), k)
+
+    new_idx = jnp.concatenate([keep_idx, grow_idx], axis=-1)       # [G, J, n]
+    onehot = jax.nn.one_hot(new_idx, spec.m, dtype=jnp.bool_)      # [G, J, n, m]
+    new_gm = jnp.moveaxis(onehot.any(axis=2), -1, 1)               # [G, m, J]
+    new_mask = new_gm.reshape(unit_mask.shape)
+
+    flips = (new_mask != unit_mask).sum()
+    stats = DSSTStats(
+        pruned=(unit_mask & ~new_mask).sum().astype(jnp.int32),
+        regrown=(~unit_mask & new_mask).sum().astype(jnp.int32),
+        mask_change=flips / unit_mask.size,
+    )
+    return new_mask, stats
+
+
+# ---------------------------------------------------------------------------
+# the paper's factorized (neuron-level) regrow sorting
+# ---------------------------------------------------------------------------
+
+def factored_group_order(pre_score: jax.Array, spec: NMSpec) -> jax.Array:
+    """Rank units inside each group by |pre| once — shared by all out columns.
+
+    ``pre_score``: [KB] per-unit input-activity magnitude (the pre-synaptic
+    gradient factor). Returns int32 [G, m] with units in descending score
+    order. This is the "post-gradient sorting reused across presynaptic
+    neurons" step: ONE sort per group instead of one per (group x output).
+    """
+    g = pre_score.shape[0] // spec.m
+    grouped = pre_score.reshape(g, spec.m)
+    return jnp.argsort(-grouped, axis=1, stable=True).astype(jnp.int32)
+
+
+def prune_regrow_factored(
+    unit_mask: jax.Array,          # bool [KB, J]
+    weight_score: jax.Array,       # [KB, J]
+    pre_score: jax.Array,          # [KB]   pre-synaptic factor |a_i|
+    post_score: jax.Array,         # [J]    post-synaptic factor |g_j| (>=0)
+    spec: NMSpec,
+    k: int,
+) -> tuple[jax.Array, DSSTStats]:
+    """DSST event using the factorized gradient ``|g_ij| = |pre_i|·|post_j|``.
+
+    Since ``|post_j|`` is constant along a group, the dense regrow choice
+    reduces to "first k inactive units in the shared per-group |pre| order".
+    Equivalent to :func:`prune_regrow` with ``grad_score = outer(pre, post)``
+    whenever ``post_score > 0`` (ties measure-zero) — tested property.
+    """
+    del post_score  # rank-1 ⇒ column factor does not change within-group order
+    order = factored_group_order(pre_score, spec)                   # [G, m]
+    g, m = order.shape
+    j = unit_mask.shape[1]
+    # rank position of each unit inside its group (0 = largest |pre|)
+    rank = jnp.zeros_like(order).at[jnp.arange(g)[:, None], order].set(
+        jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32), (g, m)))
+    # regrow score: shared, higher for smaller rank; -inf on active units.
+    shared = (m - rank).astype(weight_score.dtype)                  # [G, m]
+    grad_score = jnp.broadcast_to(shared.reshape(g * m, 1), (g * m, j))
+    return prune_regrow(unit_mask, weight_score, grad_score, spec, k)
+
+
+# ---------------------------------------------------------------------------
+# gradient-statistics accumulator (what the chip writes back for DSST sorting)
+# ---------------------------------------------------------------------------
+
+class DSSTAccumulator(NamedTuple):
+    """Running |pre| / |post| factors between connectivity updates.
+
+    The chip "writes post-gradients back for DSST sorting"; we accumulate the
+    factor magnitudes with a decaying sum so one buffer per layer suffices
+    (O(K + O) instead of O(K·O) — the whole point of the factorization).
+    """
+    pre: jax.Array    # [KB]
+    post: jax.Array   # [J]
+
+    @staticmethod
+    def init(kb: int, j: int, dtype=jnp.float32) -> "DSSTAccumulator":
+        return DSSTAccumulator(jnp.zeros((kb,), dtype), jnp.zeros((j,), dtype))
+
+    def update(self, pre_mag: jax.Array, post_mag: jax.Array, decay: float = 0.9):
+        return DSSTAccumulator(self.pre * decay + pre_mag,
+                               self.post * decay + post_mag)
+
+
+def dense_grad_unit_score(grad: jax.Array, spec: NMSpec) -> jax.Array:
+    """|grad| summarised to unit granularity — the RigL oracle key."""
+    from .sparsity import unit_scores
+    return unit_scores(grad, spec, *grad.shape, reduce="abs_sum")
+
+
+def apply_dsst_to_weights(
+    w: jax.Array, old_mask: jax.Array, new_mask: jax.Array, spec: NMSpec
+) -> jax.Array:
+    """Zero regrown connections (they restart from 0, as on-chip) and keep
+    surviving values; pruned values are dropped from compact storage."""
+    from .sparsity import expand_unit_mask
+    k, o = w.shape
+    survived = expand_unit_mask(old_mask & new_mask, spec, k, o)
+    return w * survived.astype(w.dtype)
+
+
+def maybe_dsst(
+    step,
+    cfg: DSSTConfig,
+    spec: NMSpec,
+    w: jax.Array,
+    unit_mask: jax.Array,
+    acc: DSSTAccumulator,
+):
+    """jit-safe conditional DSST event (identity off-cycle).
+
+    Returns (w, unit_mask, fresh_acc, did_update).
+    """
+    from .sparsity import unit_scores
+
+    def do(_):
+        wscore = unit_scores(w, spec, *w.shape, reduce="abs_sum")
+        k = cfg.k_per_group(spec)
+        new_mask, _ = prune_regrow_factored(unit_mask, wscore, acc.pre, acc.post, spec, k)
+        new_w = apply_dsst_to_weights(w, unit_mask, new_mask, spec)
+        return new_w, new_mask, DSSTAccumulator.init(acc.pre.shape[0], acc.post.shape[0],
+                                                     acc.pre.dtype), jnp.array(True)
+
+    def skip(_):
+        return w, unit_mask, acc, jnp.array(False)
+
+    return jax.lax.cond(cfg.is_update_step(step), do, skip, operand=None)

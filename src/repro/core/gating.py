@@ -1,0 +1,106 @@
+"""Activity-dependent weight-update gating — ElfCore's third contribution.
+
+A layer's weight update fires only when
+
+* **IA** (input activity — mean presynaptic spike rate this TS) exceeds a
+  *global* threshold: silent inputs carry nothing to learn, and updating on
+  them just integrates noise; and
+* **SS** (similarity score from the neuron dynamics — cosine between the
+  current trace and the stored previous-sample trace) is below an *adaptive
+  layer-specific* threshold: a trace (nearly) identical to what the layer
+  already produced means either a same-class repeat (contrastive target
+  invalid) or nothing new — skip, saving the full WU energy.
+
+The SS threshold adapts per layer as a running mean of observed SS, so gating
+self-calibrates on streaming data — no external scheduler, unlike
+accuracy-driven time-window tuning [2] or time-step skipping [4].
+
+The same machinery gates per-layer *optimizer* updates for the LM-family
+archs (optim/sparse.py) — IA = mean |block input|, SS = cosine of pooled
+block output vs its EMA.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GatingConfig:
+    enabled: bool = True
+    theta_ia: float = 0.005    # global input-activity threshold (spike rate)
+    ss_rho: float = 0.05       # adaptation rate of the per-layer SS threshold
+    ss_scale: float = 1.0      # threshold = ss_scale * running-mean SS:
+    #   an input whose similarity exceeds the layer's *typical* similarity
+    #   carries nothing new -> skip. With scale 1.0 the threshold rides the
+    #   running mean itself, so the gate self-calibrates to the fluctuation
+    #   band of SS whatever its absolute scale (0.1 for SNN traces across
+    #   samples, 0.9999 for slowly-moving LM pooled features).
+    ss_init: float = 1.0       # running-mean starts pessimistic: gate open early
+
+
+class GatingState(NamedTuple):
+    ss_mean: jax.Array   # [L] running mean of SS per layer
+    opened: jax.Array    # [L] count of fired gates   (telemetry)
+    offered: jax.Array   # [L] count of gate decisions (telemetry)
+
+
+def init_state(n_layers: int, cfg: GatingConfig | None = None) -> GatingState:
+    init = (cfg or GatingConfig()).ss_init
+    return GatingState(
+        ss_mean=jnp.full((n_layers,), init),
+        opened=jnp.zeros((n_layers,)),
+        offered=jnp.zeros((n_layers,)),
+    )
+
+
+class LayerGate(NamedTuple):
+    ss_mean: jax.Array
+    opened: jax.Array
+    offered: jax.Array
+
+
+def gate_update(state: GatingState, layer: int, ia: jax.Array, ss: jax.Array,
+                cfg: GatingConfig):
+    """One gate decision for ``layer``. Returns (open?, per-layer new state)."""
+    thr = cfg.ss_scale * state.ss_mean[layer]
+    open_ = (ia > cfg.theta_ia) & (ss < thr)
+    if not cfg.enabled:
+        open_ = jnp.asarray(True)
+    new_mean = (1 - cfg.ss_rho) * state.ss_mean[layer] + cfg.ss_rho * jnp.abs(ss)
+    return open_, LayerGate(new_mean,
+                            state.opened[layer] + open_.astype(jnp.float32),
+                            state.offered[layer] + 1.0)
+
+
+def merge(state: GatingState, layer_gates: Sequence[LayerGate]) -> GatingState:
+    return GatingState(
+        ss_mean=jnp.stack([g.ss_mean for g in layer_gates]),
+        opened=jnp.stack([g.opened for g in layer_gates]),
+        offered=jnp.stack([g.offered for g in layer_gates]),
+    )
+
+
+def gate_batch(state: GatingState, ia: jax.Array, ss: jax.Array,
+               cfg: GatingConfig):
+    """Vectorised per-layer gate decision (LM training path).
+
+    ``ia``, ``ss``: [L]. Returns (open [L] float 0/1, new state)."""
+    thr = cfg.ss_scale * state.ss_mean
+    open_ = (ia > cfg.theta_ia) & (ss < thr)
+    if not cfg.enabled:
+        open_ = jnp.ones_like(open_, bool)
+    new = GatingState(
+        ss_mean=(1 - cfg.ss_rho) * state.ss_mean + cfg.ss_rho * jnp.abs(ss),
+        opened=state.opened + open_.astype(jnp.float32),
+        offered=state.offered + 1.0,
+    )
+    return open_.astype(jnp.float32), new
+
+
+def skip_rate(state: GatingState) -> jax.Array:
+    """Fraction of offered WUs that were skipped (→ power saved)."""
+    return 1.0 - state.opened.sum() / jnp.maximum(state.offered.sum(), 1.0)

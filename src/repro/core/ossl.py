@@ -1,0 +1,77 @@
+"""OSSL beyond the chip — local self-supervised learning for deep nets.
+
+ElfCore's hidden layers learn with a *local* predictive + contrastive rule
+and therefore have **no backward inter-layer dependency** ("WU locking"
+resolved, §III). Scaled up, that property is a distribution feature: a
+transformer trained with per-block local losses needs **no backward pass
+across pipeline stages** — each stage updates concurrently with the forward
+wave, exactly like the chip's layer-parallel WU.
+
+This module provides that adaptation for the LM-family archs:
+
+* ``local_head_init`` — a small predictor head per block (the trace-compare
+  logic of Fig. 2, learned instead of wired).
+* ``local_loss`` — per-block loss with
+    PC  (within-sample): block output at position t predicts its own
+        representation d tokens ahead (cosine, through the predictor), and
+    CC  (across-samples): pooled representations of different sequences in
+        the batch are pushed apart (the "previous sample" negative of the
+        chip generalises to in-batch negatives for batch > 1).
+* ``block_stats`` — the IA / SS quantities the gating engine consumes.
+
+``models/transformer.py`` uses these in ``mode="local"``: block inputs are
+``stop_gradient``-ed so the total loss is a *sum of independent per-block
+problems* plus a supervised readout on frozen features (the chip's SL output
+layer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OSSLConfig:
+    predict_offset: int = 8     # d: how many tokens ahead PC predicts
+    cc_weight: float = 0.5
+    temperature: float = 0.1
+
+
+def local_head_init(rng: jax.Array, d_model: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    return {"p": jax.random.normal(rng, (d_model, d_model), dtype) * (d_model ** -0.5)}
+
+
+def _l2n(x, axis=-1, eps=1e-6):
+    return x / (jnp.linalg.norm(x, axis=axis, keepdims=True) + eps)
+
+
+def local_loss(h_out: jax.Array, head: Dict[str, jax.Array], cfg: OSSLConfig) -> jax.Array:
+    """Per-block OSSL loss. ``h_out``: [B, S, D] block output (block input was
+    stop_gradient-ed by the caller; targets are stop_gradient-ed here)."""
+    d = cfg.predict_offset
+    pred = _l2n(h_out[:, :-d] @ head["p"])                  # [B, S-d, D]
+    tgt = _l2n(jax.lax.stop_gradient(h_out[:, d:]))
+    pc = -(pred * tgt).sum(-1).mean()
+
+    pooled = _l2n(h_out.mean(axis=1))                       # [B, D]
+    sim = pooled @ pooled.T / cfg.temperature               # [B, B]
+    b = pooled.shape[0]
+    off = sim - 1e9 * jnp.eye(b, dtype=sim.dtype)
+    # push in-batch negatives apart (previous-sample contrast generalised)
+    cc = jax.nn.logsumexp(off, axis=-1).mean() - jnp.log(jnp.asarray(max(b - 1, 1), sim.dtype))
+    return pc + cfg.cc_weight * cc
+
+
+def block_stats(h_in: jax.Array, h_out: jax.Array, ema: jax.Array):
+    """(IA, SS, pooled) for the gating engine.
+
+    IA = mean |block input| (the LM analogue of presynaptic spike rate);
+    SS = cosine of the pooled block output against its running EMA (the LM
+    analogue of comparing the current trace with the stored one)."""
+    ia = jnp.abs(h_in).mean()
+    pooled = h_out.mean(axis=(0, 1))
+    ss = (_l2n(pooled, axis=0) * _l2n(ema, axis=0)).sum()
+    return ia, ss, pooled

@@ -1,0 +1,346 @@
+"""ElfCore's spiking network — the paper-faithful reproduction (floor).
+
+Implements the chip of Fig. 2 as a pure-JAX simulator:
+
+* (512)-512-512-16 topology, two hidden LIF layers (each = 4 N:M groups /
+  "PEs"), **bypass connections** from every hidden layer to the output, so
+  depth can be varied for the Fig. 7 depth study.
+* **Neuron SRAM with three traces per neuron**: the current TS's trace (used
+  by WU), a snapshot from an earlier TS of the same sample (used by
+  predictive coding), and the trace at the final TS of the *previous* sample
+  (used by contrastive coding).
+* **OSSL**: per-layer three-factor updates with concurrent PC + CC — no
+  labels, no backprop, all hidden layers update in parallel with the forward
+  pass (WU-locking removed; §III's 67–72 % TS-length cut).
+* **SL output layer**: delta-rule readout (the only place labels enter).
+* **DSST**: connectivity prune/regrow every ``period`` samples from the
+  factorized |pre|·|post| statistics written back during WU.
+* **Activity-dependent WU gating**: IA vs a global threshold, SS vs an
+  adaptive per-layer threshold (core/gating.py).
+* SOP / WU / memory-access counters feed the energy model (core/energy.py).
+
+Everything is jit-compatible; a full sample (T timesteps) is one
+``lax.scan``. Forward integration and weight update happen in the same scan
+step — the chip's "SI and WU run concurrently".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import gating as gating_lib
+from .dsst import (DSSTAccumulator, DSSTConfig, apply_dsst_to_weights,
+                   prune_regrow_factored)
+from .sparsity import NMSpec, apply_mask, paper_spec_4groups, random_unit_mask, unit_scores
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SNNConfig:
+    n_in: int = 512
+    n_hidden: int = 512
+    n_layers: int = 2          # hidden layers (1 or 2; bypass keeps output wired)
+    n_out: int = 16
+    t_steps: int = 50          # timesteps per sample
+    # neuron dynamics
+    alpha: float = 0.9         # membrane decay
+    beta: float = 0.85         # trace decay
+    theta: float = 1.0         # firing threshold (soft reset)
+    surrogate_width: float = 1.0
+    # learning
+    lr: float = 0.02           # hidden OSSL rate
+    lr_out: float = 0.1        # SL readout rate
+    cc_weight: float = 1.0     # contrastive term weight
+    pc_snapshot_frac: float = 0.5   # TS (fraction of T) at which tr_pc is latched
+    wu_start_frac: float = 0.6      # WU runs on late TSs (traces must be formed)
+    # sparsity
+    sparsity: float = 0.8
+    dense: bool = False        # dense baseline (Fig. 5/7 comparisons)
+    dsst: DSSTConfig = dataclasses.field(default_factory=lambda: DSSTConfig(period=40, prune_frac=0.25))
+    dsst_enabled: bool = True  # False = static sparse training baseline
+    # gating
+    gating: gating_lib.GatingConfig = dataclasses.field(default_factory=gating_lib.GatingConfig)
+
+    def spec(self, fan_in: int) -> NMSpec:
+        if self.dense:
+            return NMSpec(n=4, m=4)  # degenerate: keep everything, 4 "groups"
+        return paper_spec_4groups(fan_in, self.sparsity)
+
+    @property
+    def layer_fanins(self):
+        return [self.n_in] + [self.n_hidden] * (self.n_layers - 1)
+
+
+# ---------------------------------------------------------------------------
+# parameters and state
+# ---------------------------------------------------------------------------
+
+def init_params(rng: jax.Array, cfg: SNNConfig) -> Dict[str, Any]:
+    """Random weights at target sparsity from step 0 (sparse-to-sparse)."""
+    keys = jax.random.split(rng, 2 * cfg.n_layers + 2)
+    params: Dict[str, Any] = {"hidden": [], "readout": []}
+    for l, fan_in in enumerate(cfg.layer_fanins):
+        spec = cfg.spec(fan_in)
+        w = jax.random.normal(keys[2 * l], (fan_in, cfg.n_hidden)) * (1.5 / jnp.sqrt(fan_in * spec.density))
+        mask = random_unit_mask(keys[2 * l + 1], spec, fan_in, cfg.n_hidden)
+        params["hidden"].append({"w": apply_mask(w, mask, spec), "mask": mask})
+    for l in range(cfg.n_layers):  # bypass: every hidden layer feeds the output
+        wo = jax.random.normal(keys[2 * cfg.n_layers + l % 2], (cfg.n_hidden, cfg.n_out)) * 0.05
+        params["readout"].append(wo)
+    return params
+
+
+class LayerState(NamedTuple):
+    v: jax.Array        # [B, N] membrane
+    tr: jax.Array       # [B, N] current trace (WU slot)
+    tr_pc: jax.Array    # [B, N] earlier-TS snapshot (PC slot)
+    tr_cc: jax.Array    # [B, N] final trace of the previous sample (CC slot)
+
+
+class NetState(NamedTuple):
+    layers: Tuple[LayerState, ...]
+    x_tr: jax.Array            # [B, K] input (pre-synaptic) trace
+    gate: gating_lib.GatingState
+    acc: Tuple[DSSTAccumulator, ...]
+    sample_idx: jax.Array      # scalar int32
+
+
+def init_state(cfg: SNNConfig, batch: int) -> NetState:
+    mk = lambda n: LayerState(*(jnp.zeros((batch, n)) for _ in range(4)))
+    layers = tuple(mk(cfg.n_hidden) for _ in range(cfg.n_layers))
+    accs = []
+    for fan_in in cfg.layer_fanins:
+        spec = cfg.spec(fan_in)
+        kb, j = spec.unit_counts(fan_in, cfg.n_hidden)
+        accs.append(DSSTAccumulator.init(kb, j))
+    return NetState(
+        layers=layers,
+        x_tr=jnp.zeros((batch, cfg.n_in)),
+        gate=gating_lib.init_state(cfg.n_layers, cfg.gating),
+        acc=tuple(accs),
+        sample_idx=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# neuron dynamics (ref path; the Pallas kernel in kernels/lif mirrors this)
+# ---------------------------------------------------------------------------
+
+def lif_step(v, tr, current, *, alpha, beta, theta):
+    """One LIF timestep with soft reset + trace decay. Returns (v', tr', s)."""
+    v = alpha * v + current
+    s = (v >= theta).astype(v.dtype)
+    v = v - s * theta
+    tr = beta * tr + s
+    return v, tr, s
+
+
+def surrogate_grad(v, *, theta, width):
+    """Triangular STE (the chip's STE LUT for the non-derivative spike fn)."""
+    return jnp.maximum(0.0, 1.0 - jnp.abs(v - theta) / (theta * width))
+
+
+def _cos(a, b, eps=1e-6):
+    num = (a * b).sum(-1)
+    den = jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1) + eps
+    return num / den
+
+
+def _cos_grad(a, b, eps=1e-6):
+    """d cos(a,b) / d a."""
+    na = jnp.linalg.norm(a, axis=-1, keepdims=True) + eps
+    nb = jnp.linalg.norm(b, axis=-1, keepdims=True) + eps
+    c = ((a * b).sum(-1, keepdims=True)) / (na * nb)
+    return b / (na * nb) - c * a / (na * na)
+
+
+def ossl_modulator(tr, tr_pc, tr_cc, v, cfg: SNNConfig):
+    """Third factor of the three-factor rule, from purely local quantities.
+
+    Local loss  L = -cos(tr, tr_pc) + cc_weight * cos(tr, tr_cc):
+    *predict* (stay similar to) the earlier-TS trace of the same sample,
+    *contrast* against the previous sample's final trace. The modulator is
+    -dL/dtr shaped through the spike-function surrogate. PC and CC run
+    concurrently (no class-transition flag) — ElfCore §II-C.
+    """
+    g = _cos_grad(tr, tr_pc) - cfg.cc_weight * _cos_grad(tr, tr_cc)
+    return g * surrogate_grad(v, theta=cfg.theta, width=cfg.surrogate_width)
+
+
+# ---------------------------------------------------------------------------
+# one sample (T timesteps), SI + WU concurrent, one lax.scan
+# ---------------------------------------------------------------------------
+
+class SampleMetrics(NamedTuple):
+    logits: jax.Array          # [B, n_out] (final-TS readout)
+    sop_forward: jax.Array     # synaptic ops on the forward path
+    sop_wu: jax.Array          # weight-update MACs actually performed
+    sop_wu_offered: jax.Array  # WU MACs before gating (for skip-rate)
+    gate_open_frac: jax.Array  # fraction of (layer, TS) gates that fired
+    local_loss: jax.Array     # mean OSSL loss over late TSs (learning signal)
+
+
+def run_sample(
+    params: Dict[str, Any],
+    state: NetState,
+    events: jax.Array,          # [T, B, n_in] binary spikes
+    label: Optional[jax.Array],  # [B] int or None (inference)
+    cfg: SNNConfig,
+    *,
+    learn: bool = True,
+) -> Tuple[Dict[str, Any], NetState, SampleMetrics]:
+    T, B, _ = events.shape
+    specs = [cfg.spec(f) for f in cfg.layer_fanins]
+    t_pc = int(cfg.t_steps * cfg.pc_snapshot_frac)
+    t_wu = int(cfg.t_steps * cfg.wu_start_frac)
+
+    def ts_body(carry, inp):
+        t, s_in = inp["t"], inp["x"]
+        layers, x_tr, gate_st, params_h, params_r = carry
+        x_tr = cfg.beta * x_tr + s_in
+
+        new_layers = []
+        pre_spikes, pre_trace = s_in, x_tr
+        sop_fwd = jnp.zeros(())
+        sop_wu = jnp.zeros(())
+        sop_wu_off = jnp.zeros(())
+        gate_open = jnp.zeros(())
+        local_loss = jnp.zeros(())
+        new_params_h = []
+        new_gate = []
+
+        for l in range(cfg.n_layers):
+            p = params_h[l]
+            w_eff = p["w"]  # masked at write-time; stays masked
+            current = pre_spikes @ w_eff
+            st = layers[l]
+            v, tr, s = lif_step(st.v, st.tr, current, alpha=cfg.alpha, beta=cfg.beta, theta=cfg.theta)
+            tr_pc = jnp.where(t == t_pc, tr, st.tr_pc)
+
+            # ---- OSSL three-factor WU, gated, concurrent with SI ----
+            mod = ossl_modulator(tr, tr_pc, st.tr_cc, v, cfg)          # [B, N]
+            ia = pre_spikes.mean()
+            ss = _cos(tr, st.tr_cc).mean()
+            open_, gate_l = gating_lib.gate_update(gate_st, l, ia, ss, cfg.gating)
+            wu_on = open_ & (t >= t_wu) & jnp.asarray(learn)
+            scale = jnp.where(wu_on, cfg.lr / B, 0.0)
+            dw = scale * (pre_trace.T @ mod)                           # [K, N]
+            mask_f = _dense_mask(p["mask"], specs[l], *p["w"].shape)
+            w_new = p["w"] + dw * mask_f
+            new_params_h.append({"w": w_new, "mask": p["mask"]})
+            new_gate.append(gate_l)
+
+            # ---- telemetry (energy model inputs) ----
+            act_density = specs[l].density
+            sop_fwd += pre_spikes.sum() * cfg.n_hidden * act_density
+            offered = B * pre_trace.shape[1] * cfg.n_hidden * act_density
+            sop_wu_off += offered * (t >= t_wu)
+            sop_wu += offered * wu_on
+            gate_open += open_.astype(jnp.float32)
+            local_loss += (-_cos(tr, tr_pc) + cfg.cc_weight * _cos(tr, st.tr_cc)).mean() * (t >= t_wu)
+
+            new_layers.append(LayerState(v, tr, tr_pc, st.tr_cc))
+            pre_spikes, pre_trace = s, tr
+
+        gate_st = gating_lib.merge(gate_st, new_gate)
+
+        # readout (bypass: all hidden traces feed the output)
+        logits = sum(new_layers[l].tr @ params_r[l] for l in range(cfg.n_layers))
+        out = dict(logits=logits, sop_fwd=sop_fwd, sop_wu=sop_wu,
+                   sop_wu_off=sop_wu_off, gate=gate_open / cfg.n_layers,
+                   loss=local_loss / cfg.n_layers)
+        return (tuple(new_layers), x_tr, gate_st, new_params_h, params_r), out
+
+    carry0 = (state.layers, state.x_tr, state.gate, list(params["hidden"]), list(params["readout"]))
+    xs = {"t": jnp.arange(T), "x": events}
+    (layers, x_tr, gate_st, ph, pr), outs = jax.lax.scan(ts_body, carry0, xs)
+
+    logits = outs["logits"][-1]
+
+    # ---- SL delta rule on the output layer (labels only used here) ----
+    if label is not None and learn:
+        err = jax.nn.one_hot(label, cfg.n_out) - jax.nn.softmax(logits)   # [B, n_out]
+        pr = [pr[l] + (cfg.lr_out / B) * (layers[l].tr.T @ err) for l in range(cfg.n_layers)]
+
+    # ---- DSST statistics write-back + (maybe) connectivity update ----
+    new_acc = []
+    new_hidden = []
+    pre_traces = [x_tr] + [layers[l].tr for l in range(cfg.n_layers - 1)]
+    for l in range(cfg.n_layers):
+        spec = specs[l]
+        pre_mag = jnp.abs(pre_traces[l]).mean(0)                      # [K]
+        mod = ossl_modulator(layers[l].tr, layers[l].tr_pc, layers[l].tr_cc,
+                             layers[l].v, cfg)
+        post_mag = jnp.abs(mod).mean(0)                               # [N]
+        kb = spec.unit_counts(*ph[l]["w"].shape)[0]
+        pre_units = pre_mag.reshape(kb, -1).sum(-1)
+        acc = state.acc[l].update(pre_units, post_mag)
+        w, mask = ph[l]["w"], ph[l]["mask"]
+        if cfg.dsst_enabled and not cfg.dense and learn:
+            def do(args):
+                w, mask, acc = args
+                wsc = unit_scores(w, spec, *w.shape, reduce="abs_sum")
+                k = cfg.dsst.k_per_group(spec)
+                nm, _ = prune_regrow_factored(mask, wsc, acc.pre, acc.post, spec, k)
+                return (apply_dsst_to_weights(w, mask, nm, spec), nm,
+                        DSSTAccumulator.init(acc.pre.shape[0], acc.post.shape[0]))
+
+            def skip(args):
+                return args
+
+            w, mask, acc = jax.lax.cond(
+                cfg.dsst.is_update_step(state.sample_idx), do, skip, (w, mask, acc))
+        new_acc.append(acc)
+        new_hidden.append({"w": w, "mask": mask})
+
+    # ---- roll the CC slot: final trace of this sample becomes the negative ----
+    final_layers = tuple(
+        LayerState(v=jnp.zeros_like(st.v), tr=jnp.zeros_like(st.tr),
+                   tr_pc=jnp.zeros_like(st.tr_pc), tr_cc=st.tr)
+        for st in layers)
+
+    new_params = {"hidden": new_hidden, "readout": pr}
+    new_state = NetState(layers=final_layers, x_tr=jnp.zeros_like(x_tr),
+                         gate=gate_st, acc=tuple(new_acc),
+                         sample_idx=state.sample_idx + 1)
+    metrics = SampleMetrics(
+        logits=logits,
+        sop_forward=outs["sop_fwd"].sum(),
+        sop_wu=outs["sop_wu"].sum(),
+        sop_wu_offered=outs["sop_wu_off"].sum(),
+        gate_open_frac=outs["gate"].mean(),
+        local_loss=outs["loss"].sum() / max(1, T - t_wu),
+    )
+    return new_params, new_state, metrics
+
+
+def _dense_mask(unit_mask, spec: NMSpec, k, o):
+    from .sparsity import expand_unit_mask
+    return expand_unit_mask(unit_mask, spec, k, o).astype(jnp.float32)
+
+
+# jit entry points -----------------------------------------------------------
+
+def make_train_fn(cfg: SNNConfig):
+    @jax.jit
+    def step(params, state, events, label):
+        return run_sample(params, state, events, label, cfg, learn=True)
+    return step
+
+
+def make_eval_fn(cfg: SNNConfig):
+    @jax.jit
+    def step(params, state, events):
+        _, state, m = run_sample(params, state, events, None, cfg, learn=False)
+        return state, m
+    return step
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return (jnp.argmax(logits, -1) == labels).mean()

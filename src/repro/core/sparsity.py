@@ -1,0 +1,226 @@
+"""N:M structured sparsity — the weight-memory substrate of ElfCore's DSST.
+
+Two granularities (DESIGN.md §2):
+
+* **element** (``block=1``): the paper-faithful form. For a weight matrix
+  ``w[(in), (out)]`` the input dimension is split into groups of ``m``
+  consecutive elements; exactly ``n`` of each group are materialised per
+  output neuron.  ElfCore stores these as (8-bit value, 9-bit index) SRAM
+  words; we store (value, local-index) arrays with the same structural ratio.
+
+* **block** (``block=128``): the TPU/MXU adaptation. The input dimension is
+  split into blocks of ``block`` rows; blocks are grouped ``m`` at a time and
+  ``n`` blocks per group are kept, with an independent pattern per
+  ``block``-wide output tile.  Arithmetic inside kept tiles stays dense
+  (MXU-friendly); the memory cut and prune/regrow dynamics match the paper's
+  at block resolution.
+
+Masks are always materialisable to a dense boolean ``[K, O]`` for reference
+math; compact layouts are what kernels and checkpoints carry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class NMSpec:
+    """Keep ``n`` of every ``m`` units (elements or blocks) along the input dim.
+
+    ``block`` is the unit size in rows; ``block == 1`` is element N:M.
+    ``out_tile`` is the output-column tile that shares one pattern
+    (1 for element granularity, typically 128 for block granularity).
+    """
+
+    n: int
+    m: int
+    block: int = 1
+    out_tile: int = 1
+
+    def __post_init__(self):
+        if not (0 < self.n <= self.m):
+            raise ValueError(f"need 0 < n <= m, got n={self.n} m={self.m}")
+        if self.block < 1 or self.out_tile < 1:
+            raise ValueError("block/out_tile must be >= 1")
+
+    @property
+    def density(self) -> float:
+        return self.n / self.m
+
+    @property
+    def sparsity(self) -> float:
+        return 1.0 - self.density
+
+    def group_shape(self, k: int, o: int) -> Tuple[int, int, int]:
+        """(num_groups G, units per group M, num out tiles J) for a [k, o] weight."""
+        kb, ob = self.unit_counts(k, o)
+        if kb % self.m:
+            raise ValueError(f"K units {kb} not divisible by m={self.m}")
+        return kb // self.m, self.m, ob
+
+    def unit_counts(self, k: int, o: int) -> Tuple[int, int]:
+        if k % self.block:
+            raise ValueError(f"K={k} not divisible by block={self.block}")
+        if o % self.out_tile:
+            raise ValueError(f"O={o} not divisible by out_tile={self.out_tile}")
+        return k // self.block, o // self.out_tile
+
+
+def paper_spec_4groups(k: int, sparsity: float = 0.8) -> NMSpec:
+    """ElfCore's configuration: 4 N:M groups across the fan-in.
+
+    The chip splits each neuron's fan-in into 4 groups (one per PE); with
+    target sparsity ``s`` each group keeps ``round(M * (1-s))`` connections.
+    """
+    if k % 4:
+        raise ValueError("fan-in must divide into 4 groups")
+    m = k // 4
+    n = max(1, int(round(m * (1.0 - sparsity))))
+    return NMSpec(n=n, m=m, block=1, out_tile=1)
+
+
+# ---------------------------------------------------------------------------
+# mask construction / validation
+# ---------------------------------------------------------------------------
+
+def _unit_mask_shape(spec: NMSpec, k: int, o: int) -> Tuple[int, int]:
+    return spec.unit_counts(k, o)
+
+
+def random_unit_mask(rng: jax.Array, spec: NMSpec, k: int, o: int) -> jax.Array:
+    """Uniform random N:M pattern at unit (element/block) granularity.
+
+    Returns bool ``[KB, J]`` where KB = K/block units and J = O/out_tile tiles.
+    DSST starts from exactly this ("uniform N:M sparsity to maximise mask
+    diversity"), *not* from a dense net.
+    """
+    kb, j = _unit_mask_shape(spec, k, o)
+    g, m, _ = spec.group_shape(k, o)
+    scores = jax.random.uniform(rng, (g, m, j))
+    # top-n random scores per (group, out-tile) -> exactly n kept units.
+    kth = jnp.sort(scores, axis=1)[:, m - spec.n, :]  # n-th largest
+    mask = scores >= kth[:, None, :]
+    return mask.reshape(kb, j)
+
+
+def expand_unit_mask(unit_mask: jax.Array, spec: NMSpec, k: int, o: int) -> jax.Array:
+    """Unit-granular mask [KB, J] -> dense boolean [K, O]."""
+    kb, j = _unit_mask_shape(spec, k, o)
+    assert unit_mask.shape == (kb, j), (unit_mask.shape, (kb, j))
+    dense = jnp.repeat(jnp.repeat(unit_mask, spec.block, axis=0), spec.out_tile, axis=1)
+    return dense
+
+
+def check_unit_mask(unit_mask: jax.Array, spec: NMSpec) -> jax.Array:
+    """True iff every (group, out-tile) keeps exactly n units."""
+    kb, j = unit_mask.shape
+    g = kb // spec.m
+    counts = unit_mask.reshape(g, spec.m, j).sum(axis=1)
+    return jnp.all(counts == spec.n)
+
+
+# ---------------------------------------------------------------------------
+# compact <-> dense conversion (value + index storage, as on the chip)
+# ---------------------------------------------------------------------------
+
+def compact_indices(unit_mask: jax.Array, spec: NMSpec) -> jax.Array:
+    """Per (group, out-tile): the ``n`` kept unit indices (local in [0, m)).
+
+    Returns int32 ``[G, n, J]``, ascending per group. Shape is static — this
+    is the 9-bit index SRAM of the chip.
+    """
+    kb, j = unit_mask.shape
+    g = kb // spec.m
+    grouped = unit_mask.reshape(g, spec.m, j)
+    # argsort of (not kept) is stable => kept units first, ascending order.
+    order = jnp.argsort(~grouped, axis=1, stable=True)
+    return order[:, : spec.n, :].astype(jnp.int32)
+
+
+def indices_to_unit_mask(idx: jax.Array, spec: NMSpec) -> jax.Array:
+    """Inverse of :func:`compact_indices`: int32 [G, n, J] -> bool [KB, J]."""
+    g, n, j = idx.shape
+    onehot = jax.nn.one_hot(idx, spec.m, axis=1, dtype=jnp.bool_)  # [G, m, n, J]
+    grouped = onehot.any(axis=2)
+    return grouped.reshape(g * spec.m, j)
+
+
+def compact_values(w: jax.Array, idx: jax.Array, spec: NMSpec) -> jax.Array:
+    """Gather kept weights into compact storage.
+
+    ``w``: dense [K, O]; ``idx``: [G, n, J] local unit indices.
+    Returns [G, n, block, O] — for element granularity this is [G, n, 1, O].
+    (The out_tile axis stays dense inside O; the pattern only repeats.)
+    """
+    k, o = w.shape
+    g, n, j = idx.shape
+    wg = w.reshape(g, spec.m, spec.block, o)
+    # broadcast idx over out-tiles: take per (g, tile) — build per-column index.
+    idx_cols = jnp.repeat(idx, spec.out_tile, axis=2)  # [G, n, O]
+    return jnp.take_along_axis(wg, idx_cols[:, :, None, :], axis=1)
+
+
+def densify_values(values: jax.Array, idx: jax.Array, spec: NMSpec, k: int, o: int) -> jax.Array:
+    """Scatter compact [G, n, block, O] back to dense [K, O] (zeros elsewhere)."""
+    g, n, j = idx.shape
+    idx_cols = jnp.repeat(idx, spec.out_tile, axis=2)  # [G, n, O]
+    dense_g = jnp.zeros((g, spec.m, spec.block, o), values.dtype)
+    dense_g = jax.vmap(  # over groups
+        lambda dg, ic, vv: dg.at[ic[:, None, :], jnp.arange(spec.block)[None, :, None],
+                                 jnp.arange(o)[None, None, :]].set(vv)
+    )(dense_g, idx_cols, values)
+    return dense_g.reshape(k, o)
+
+
+# ---------------------------------------------------------------------------
+# memory accounting (the paper's "3.8x on-chip memory cut")
+# ---------------------------------------------------------------------------
+
+def memory_bits(k: int, o: int, spec: NMSpec, weight_bits: int = 8) -> dict:
+    """Weight-memory cost of dense vs compact N:M storage, in bits.
+
+    Mirrors the chip: ``weight_bits`` per kept value plus an index of
+    ``ceil(log2 m)`` bits per kept unit per out-tile column group.
+    """
+    g, m, j = spec.group_shape(k, o)
+    idx_bits = max(1, int(np.ceil(np.log2(spec.m))))
+    dense = k * o * weight_bits
+    kept_values = g * spec.n * spec.block * o * weight_bits
+    kept_index = g * spec.n * j * idx_bits
+    comp = kept_values + kept_index
+    return {
+        "dense_bits": dense,
+        "compact_bits": comp,
+        "reduction": 1.0 - comp / dense,
+        "index_overhead": kept_index / comp,
+    }
+
+
+# ---------------------------------------------------------------------------
+# masked-apply helpers used by reference paths
+# ---------------------------------------------------------------------------
+
+def apply_mask(w: jax.Array, unit_mask: jax.Array, spec: NMSpec) -> jax.Array:
+    return w * expand_unit_mask(unit_mask, spec, *w.shape).astype(w.dtype)
+
+
+def unit_scores(x: jax.Array, spec: NMSpec, k: int, o: int, reduce: str = "abs_sum") -> jax.Array:
+    """Summarise a dense [K, O] tensor to unit granularity [KB, J].
+
+    Used to turn dense weight/grad magnitudes into block-level prune/regrow
+    scores. ``abs_sum`` matches "k smallest weights" at block resolution.
+    """
+    kb, j = spec.unit_counts(k, o)
+    xg = x.reshape(kb, spec.block, j, spec.out_tile)
+    if reduce == "abs_sum":
+        return jnp.abs(xg).sum(axis=(1, 3))
+    if reduce == "sum":
+        return xg.sum(axis=(1, 3))
+    if reduce == "max":
+        return jnp.abs(xg).max(axis=(1, 3))
+    raise ValueError(reduce)

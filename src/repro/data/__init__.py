@@ -1,0 +1,2 @@
+from .pipeline import TokenPipeline, synthetic_lm_batch  # noqa: F401
+from .events import EventTask, make_task, TASK_NAMES  # noqa: F401

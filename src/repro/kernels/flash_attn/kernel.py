@@ -1,0 +1,195 @@
+"""Flash attention (causal GQA, optional sliding window) as Pallas TPU
+kernels — forward AND backward.
+
+Why it matters here: the dry-run's memory roofline term for train/prefill
+cells is dominated by S² score traffic (softmax materialised in HBM by the
+XLA path). Flash keeps the [bq, bk] score tile in VMEM with online-softmax
+accumulators — HBM traffic returns to O(S·d), which on the roofline moves
+deepseek-67b train_4k from memory-bound toward the MXU bound (§Perf).
+
+Layout: q [N, S, dh], k/v [N, T, dh] with N = B·KV·G flattened outside (the
+wrapper repeats K/V per GQA group view — zero-copy broadcast). Grid
+(N, nq, nk), kv innermost; per-(row-tile) VMEM scratch: acc [bq, dh], and
+m/l running max/sum [bq] carried across kv steps.
+
+Backward: the standard two-kernel flash backward —
+  * dkv kernel: grid (N, nk, nq): recompute p tile, accumulate dk, dv;
+  * dq  kernel: grid (N, nq, nk): recompute p tile, accumulate dq;
+both use the saved forward logsumexp ``l`` and the precomputed row dot
+``delta = rowsum(dout * out)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mask_tile(iq, ik, bq, bk, window):
+    qi = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kj = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = kj <= qi
+    if window is not None:
+        ok &= (qi - kj) < window
+    return ok
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                acc_ref, m_ref, l_ref, *, bq, bk, nk, scale, window):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    s = jnp.dot(q_ref[0], k_ref[0].T,
+                preferred_element_type=jnp.float32) * scale      # [bq, bk]
+    s = jnp.where(_mask_tile(iq, ik, bq, bk, window), s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0] = (m_ref[...] + jnp.log(l)).astype(lse_ref.dtype)
+
+
+def flash_fwd(q, k, v, *, bq=128, bk=128, window=None, interpret=False):
+    """q [N,S,dh], k/v [N,T,dh] -> (out [N,S,dh], lse [N,S])."""
+    n, s, dh = q.shape
+    t = k.shape[1]
+    bq, bk = min(bq, s), min(bk, t)
+    assert s % bq == 0 and t % bk == 0
+    grid = (n, s // bq, t // bk)
+    scale = dh ** -0.5
+    kernel = functools.partial(_fwd_kernel, bq=bq, bk=bk, nk=t // bk,
+                               scale=scale, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+                  pl.BlockSpec((1, bk, dh), lambda h, i, j: (h, j, 0)),
+                  pl.BlockSpec((1, bk, dh), lambda h, i, j: (h, j, 0))],
+        out_specs=[pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+                   pl.BlockSpec((1, bq), lambda h, i, j: (h, i))],
+        out_shape=[jax.ShapeDtypeStruct((n, s, dh), q.dtype),
+                   jax.ShapeDtypeStruct((n, s), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bq, dh), jnp.float32),
+                        pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq,), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc, *, bq, bk, nq, scale, window):
+    ik, iq = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    s = jnp.dot(q_ref[0], k_ref[0].T,
+                preferred_element_type=jnp.float32) * scale      # [bq, bk]
+    s = jnp.where(_mask_tile(iq, ik, bq, bk, window), s, NEG_INF)
+    p = jnp.exp(s - lse_ref[0][:, None])                         # [bq, bk]
+    do = do_ref[0].astype(jnp.float32)
+    dv_acc[...] += jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+    dp = jnp.dot(do, v_ref[0].T.astype(jnp.float32),
+                 preferred_element_type=jnp.float32)
+    ds = p * (dp - delta_ref[0][:, None]) * scale                # [bq, bk]
+    dk_acc[...] += jnp.dot(ds.T, q_ref[0].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+
+    @pl.when(iq == nq - 1)
+    def _flush():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+               dq_ref, dq_acc, *, bq, bk, nk, scale, window):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    s = jnp.dot(q_ref[0], k_ref[0].T,
+                preferred_element_type=jnp.float32) * scale
+    s = jnp.where(_mask_tile(iq, ik, bq, bk, window), s, NEG_INF)
+    p = jnp.exp(s - lse_ref[0][:, None])
+    do = do_ref[0].astype(jnp.float32)
+    dp = jnp.dot(do, v_ref[0].T.astype(jnp.float32),
+                 preferred_element_type=jnp.float32)
+    ds = p * (dp - delta_ref[0][:, None]) * scale
+    dq_acc[...] += jnp.dot(ds, k_ref[0].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        dq_ref[0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def flash_bwd(q, k, v, out, lse, dout, *, bq=128, bk=128, window=None,
+              interpret=False):
+    n, s, dh = q.shape
+    t = k.shape[1]
+    bq, bk = min(bq, s), min(bk, t)
+    grid_kv = (n, t // bk, s // bq)
+    grid_q = (n, s // bq, t // bk)
+    scale = dh ** -0.5
+    delta = (dout.astype(jnp.float32) * out.astype(jnp.float32)).sum(-1)  # [N,S]
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, bq=bq, bk=bk, nq=s // bq,
+                          scale=scale, window=window),
+        grid=grid_kv,
+        in_specs=[pl.BlockSpec((1, bq, dh), lambda h, j, i: (h, i, 0)),   # q
+                  pl.BlockSpec((1, bk, dh), lambda h, j, i: (h, j, 0)),   # k
+                  pl.BlockSpec((1, bk, dh), lambda h, j, i: (h, j, 0)),   # v
+                  pl.BlockSpec((1, bq, dh), lambda h, j, i: (h, i, 0)),   # do
+                  pl.BlockSpec((1, bq), lambda h, j, i: (h, i)),          # lse
+                  pl.BlockSpec((1, bq), lambda h, j, i: (h, i))],         # delta
+        out_specs=[pl.BlockSpec((1, bk, dh), lambda h, j, i: (h, j, 0)),
+                   pl.BlockSpec((1, bk, dh), lambda h, j, i: (h, j, 0))],
+        out_shape=[jax.ShapeDtypeStruct(k.shape, k.dtype),
+                   jax.ShapeDtypeStruct(v.shape, v.dtype)],
+        scratch_shapes=[pltpu.VMEM((bk, dh), jnp.float32),
+                        pltpu.VMEM((bk, dh), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, dout, lse, delta)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, bq=bq, bk=bk, nk=t // bk,
+                          scale=scale, window=window),
+        grid=grid_q,
+        in_specs=[pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+                  pl.BlockSpec((1, bk, dh), lambda h, i, j: (h, j, 0)),
+                  pl.BlockSpec((1, bk, dh), lambda h, i, j: (h, j, 0)),
+                  pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+                  pl.BlockSpec((1, bq), lambda h, i, j: (h, i)),
+                  pl.BlockSpec((1, bq), lambda h, i, j: (h, i))],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, dh), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, dout, lse, delta)
+    return dq, dk, dv

@@ -1,0 +1,134 @@
+"""Public flash-attention op: GQA layout handling + custom_vjp.
+
+``flash_attention(q, k, v, window)`` takes model-layout tensors
+(q [B,S,H,dh], k/v [B,S,KV,dh]); GQA groups are flattened into the kernel's
+N axis with k/v broadcast per group (zero-copy view). On non-TPU backends
+(unless forced) it falls back to the jnp reference — interpret-mode flash is
+a correctness tool. Custom VJP runs the flash backward kernels with the
+saved forward logsumexp.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import flash_bwd, flash_fwd
+
+
+def _use_pallas(force):
+    return force or jax.default_backend() == "tpu"
+
+
+def _to_kernel_layout(q, k, v):
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qk = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    t = k.shape[1]
+    kk = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None],
+                          (b, kv, g, t, dh)).reshape(b * h, t, dh)
+    vk = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None],
+                          (b, kv, g, t, dh)).reshape(b * h, t, dh)
+    return qk, kk, vk
+
+
+def _from_kernel_layout(o, b, s, h, dh):
+    return o.reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, window: Optional[int] = None,
+                    interpret: bool = False, force_pallas: bool = False):
+    out, _ = _fwd(q, k, v, window, interpret, force_pallas)
+    return out
+
+
+def _fwd(q, k, v, window, interpret, force_pallas):
+    if not _use_pallas(force_pallas):
+        return ref.attention(q, k, v, window), None
+    b, s, h, dh = q.shape
+    qk, kk, vk = _to_kernel_layout(q, k, v)
+    o, lse = flash_fwd(qk, kk, vk, window=window,
+                       interpret=interpret or jax.default_backend() != "tpu")
+    return _from_kernel_layout(o, b, s, h, dh), (q, k, v, o, lse)
+
+
+def _vjp_fwd(q, k, v, window, interpret, force_pallas):
+    out, res = _fwd(q, k, v, window, interpret, force_pallas)
+    if res is None:  # ref path: fall back to autodiff-able residuals
+        return out, (q, k, v, None, None)
+    return out, res
+
+
+def _vjp_bwd(window, interpret, force_pallas, res, dout):
+    q, k, v, o, lse = res
+    if o is None:  # ref path
+        f = lambda q_, k_, v_: ref.attention(q_, k_, v_, window)
+        _, pullback = jax.vjp(f, q, k, v)
+        return pullback(dout)
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qk, kk, vk = _to_kernel_layout(q, k, v)
+    dok = dout.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    dq, dk, dv = flash_bwd(qk, kk, vk, o, lse, dok, window=window,
+                           interpret=interpret or jax.default_backend() != "tpu")
+    dq = _from_kernel_layout(dq, b, s, h, dh)
+    t = k.shape[1]
+    # sum GQA group contributions back into the kv heads
+    dk = dk.reshape(b, kv, g, t, dh).sum(axis=2).transpose(0, 2, 1, 3)
+    dv = dv.reshape(b, kv, g, t, dh).sum(axis=2).transpose(0, 2, 1, 3)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def hbm_bytes(b: int, s: int, h: int, dh: int, *, bq: int = 128, bk: int = 128,
+              dtype_bytes: int = 2, causal: bool = True,
+              with_backward: bool = True) -> int:
+    """Exact HBM traffic of the flash kernels from their BlockSpec schedule.
+
+    Pallas loads each input block once per grid step (revisited blocks stay
+    in VMEM across the innermost axis): per (n, i) the q block loads once;
+    k/v blocks load per (i, j) pair. Causal masking visits only j ≤ i tiles.
+    This is the number the §Perf roofline uses for the flash path — the
+    kernel cannot execute on this CPU container, but its memory behaviour is
+    fully determined by the tiling schedule.
+    """
+    n = b * h
+    nq, nk = s // bq, s // bk
+    tiles = (nq * (nq + 1)) // 2 if causal and nq == nk else nq * nk
+    f32 = 4
+    fwd = (n * s * dh * dtype_bytes                 # q once
+           + 2 * n * tiles * bk * dh * dtype_bytes  # k, v per visited tile
+           + n * s * dh * dtype_bytes               # out
+           + n * s * f32)                           # lse
+    if not with_backward:
+        return fwd
+    # dkv kernel: k/v/dk/dv once per (n, j); q/do/lse/delta per visited tile
+    dkv = (4 * n * s * dh * dtype_bytes
+           + 2 * n * tiles * bq * dh * dtype_bytes
+           + 2 * n * tiles * bq * f32)
+    # dq kernel: q/do/dq once per (n, i); k/v per visited tile
+    dq = (3 * n * s * dh * dtype_bytes
+          + 2 * n * tiles * bk * dh * dtype_bytes
+          + 2 * n * s * f32)
+    return fwd + dkv + dq
+
+
+def xla_score_path_bytes(b: int, s: int, h: int, dh: int,
+                         dtype_bytes: int = 2) -> int:
+    """HBM traffic of the unfused score path the dry-run artifacts count:
+    scores f32 write+read, probs write+read (fwd), and the backward's
+    recompute + dprobs/dscores round trips — what flash removes."""
+    n = b * h
+    f32 = 4
+    s2 = n * s * s
+    fwd = s2 * (f32 + f32 + dtype_bytes + dtype_bytes)
+    bwd = 2 * fwd + s2 * 2 * f32
+    return fwd + bwd

@@ -1,0 +1,27 @@
+"""jnp oracle for the flash-attention kernel: plain causal (optionally
+sliding-window) GQA attention, f32 softmax."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              window: Optional[int] = None) -> jax.Array:
+    """q [B,S,H,dh], k/v [B,S,KV,dh] -> [B,S,H,dh]. Causal."""
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / (dh ** 0.5)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    ok = j <= i
+    if window is not None:
+        ok &= (i - j) < window
+    scores = jnp.where(ok[None, None, None], scores.astype(jnp.float32), -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, dh)

@@ -1,0 +1,41 @@
+"""Fused LIF neuron-update Pallas kernel.
+
+The chip's neuron pipeline touches each neuron word once per TS: membrane
+decay + integrate, threshold, soft reset, trace decay + spike add. Done
+naively in jnp that is four elementwise HBM round-trips over [B, N]; fused
+here it is a single VMEM pass (VPU only, no MXU) producing all three outputs
+from one load of (v, tr, I).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(v_ref, tr_ref, i_ref, vo_ref, tro_ref, s_ref, *,
+            alpha: float, beta: float, theta: float):
+    v = alpha * v_ref[...] + i_ref[...]
+    s = (v >= theta).astype(v.dtype)
+    vo_ref[...] = v - s * theta
+    tro_ref[...] = beta * tr_ref[...] + s
+    s_ref[...] = s
+
+
+def lif_pallas(v, tr, current, *, alpha: float, beta: float, theta: float,
+               bm: int = 8, bn: int = 128, interpret: bool = False):
+    b, n = v.shape
+    assert b % bm == 0 and n % bn == 0, (v.shape, bm, bn)
+    grid = (b // bm, n // bn)
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    out_shape = [jax.ShapeDtypeStruct((b, n), v.dtype)] * 3
+    return pl.pallas_call(
+        functools.partial(_kernel, alpha=alpha, beta=beta, theta=theta),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(v, tr, current)

@@ -1,0 +1,30 @@
+"""Public fused-LIF op with automatic padding + backend dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import lif_pallas
+
+
+def _pad_to(x, bm, bn):
+    b, n = x.shape
+    pb, pn = (-b) % bm, (-n) % bn
+    if pb or pn:
+        x = jnp.pad(x, ((0, pb), (0, pn)))
+    return x
+
+
+def lif_step(v, tr, current, *, alpha: float, beta: float, theta: float,
+             interpret: bool = False, force_pallas: bool = False):
+    """Fused LIF update. Pallas on TPU (or when forced), jnp ref otherwise."""
+    if not (force_pallas or jax.default_backend() == "tpu"):
+        return ref.lif_step(v, tr, current, alpha=alpha, beta=beta, theta=theta)
+    b, n = v.shape
+    bm, bn = 8, 128
+    vp, trp, ip = (_pad_to(a, bm, bn) for a in (v, tr, current))
+    vo, tro, s = lif_pallas(vp, trp, ip, alpha=alpha, beta=beta, theta=theta,
+                            bm=bm, bn=bn,
+                            interpret=interpret or jax.default_backend() != "tpu")
+    return vo[:b, :n], tro[:b, :n], s[:b, :n]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused LIF + trace update (core/snn.py dynamics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lif_step(v, tr, current, *, alpha: float, beta: float, theta: float):
+    """(v, tr, I) -> (v', tr', s): leaky integrate, fire, soft reset, trace."""
+    v = alpha * v + current
+    s = (v >= theta).astype(v.dtype)
+    v = v - s * theta
+    tr = beta * tr + s
+    return v, tr, s

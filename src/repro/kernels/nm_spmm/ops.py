@@ -1,0 +1,81 @@
+"""Public op: block-N:M sparse matmul with sparse-to-sparse gradients.
+
+``nm_spmm(x, w_compact, idx)`` dispatches to the Pallas kernel (TPU, or
+interpret mode when forced) or to the jnp reference (CPU default — interpret
+mode is a correctness tool, not a fast path), wrapped in a ``custom_vjp``
+whose backward pass **never materialises the dense weight matrix**:
+
+* ``dx``        — transposed sparse matmul, assembled block-wise;
+* ``dw_compact``— gradient *only for materialised blocks* (gather x blocks,
+  per-block outer product). This is the chip's sparse WU philosophy: pruned
+  connections receive no gradient storage; DSST's regrow scoring instead
+  uses the factorized |pre|·|post| statistics (core/dsst.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import nm_spmm_pallas
+
+
+def _use_pallas(force_pallas: bool) -> bool:
+    if force_pallas:
+        return True
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def nm_spmm(x, w_compact, idx, interpret=False, force_pallas=False):
+    return _fwd_impl(x, w_compact, idx, interpret, force_pallas)
+
+
+def _fwd_impl(x, w_compact, idx, interpret, force_pallas):
+    if _use_pallas(force_pallas):
+        return nm_spmm_pallas(x, w_compact, idx,
+                              interpret=interpret or jax.default_backend() != "tpu")
+    return ref.nm_spmm(x, w_compact, idx)
+
+
+def _fwd(x, w_compact, idx, interpret, force_pallas):
+    return _fwd_impl(x, w_compact, idx, interpret, force_pallas), (x, w_compact, idx)
+
+
+def _bwd(interpret, force_pallas, res, dy):
+    x, w_compact, idx = res
+    j, t, bk, bo = w_compact.shape
+    b, k = x.shape
+    dyt = dy.reshape(b, j, bo)
+
+    # dx: scatter-add transposed block matmuls into the kept rows only.
+    dxg = jnp.einsum("bjo,jtko->bjtk", dyt, w_compact)      # [B, J, T, bk]
+    dxb = jnp.zeros((b, k // bk, bk), x.dtype)
+    dxb = dxb.at[:, idx, :].add(dxg.astype(x.dtype))
+    dx = dxb.reshape(b, k)
+
+    # dw_compact: gradient only where a block is materialised.
+    xb = x.reshape(b, k // bk, bk)
+    xg = xb[:, idx, :]                                      # [B, J, T, bk]
+    dwc = jnp.einsum("bjtk,bjo->jtko", xg, dyt).astype(w_compact.dtype)
+    return dx, dwc, None
+
+
+nm_spmm.defvjp(_fwd, _bwd)
+
+
+def make_compact(w_dense: jax.Array, unit_mask: jax.Array, bk: int, bo: int):
+    """Dense [K, O] + unit mask [K/bk, O/bo] -> (w_compact [J,T,bk,bo], idx [J,T]).
+
+    Every out tile must keep the same *count* of blocks (N:M guarantees it).
+    """
+    k, o = w_dense.shape
+    kb, j = unit_mask.shape
+    assert kb == k // bk and j == o // bo
+    t = int(unit_mask[:, 0].sum())
+    idx = jnp.argsort(~unit_mask, axis=0, stable=True)[:t].T.astype(jnp.int32)  # [J, T]
+    wb = w_dense.reshape(kb, bk, j, bo).transpose(2, 0, 1, 3)  # [J, KB, bk, bo]
+    w_compact = jnp.take_along_axis(wb, idx[:, :, None, None], axis=1)
+    return w_compact, idx

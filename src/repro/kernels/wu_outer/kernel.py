@@ -1,0 +1,66 @@
+"""Gated three-factor sparse weight-update Pallas kernel.
+
+The ElfCore WU engine computes, concurrently with spike integration,
+``ΔW = gate · lr · pre_trace ⊗ modulator`` for the *materialised* N:M
+connections only. On TPU this is a batched outer product per kept block:
+
+* grid = (out-tiles J, kept-blocks T, row-chunks R) with row chunks innermost
+  so partial outer products accumulate in an f32 VMEM scratch tile;
+* the same scalar-prefetched ``idx`` table as nm_spmm gathers the presynaptic
+  trace block (the two engines share one index SRAM on the chip);
+* the gate (already folded with the learning rate into ``scale``) arrives as
+  a [1,1] SMEM operand — a gated-off layer multiplies by 0.0, which XLA's
+  scheduler can elide entirely when the gate is a compile-time constant; at
+  runtime the energy model counts it as a skipped WU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, scale_ref, pre_ref, mod_ref, dw_ref, acc_ref, *, n_rows: int):
+    r = pl.program_id(2)
+
+    @pl.when(r == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # [bk, bb] @ [bb, bo] outer-product chunk on the MXU
+    acc_ref[...] += jnp.dot(pre_ref[...].T, mod_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(r == n_rows - 1)
+    def _flush():
+        dw_ref[0, 0] = (scale_ref[0, 0] * acc_ref[...]).astype(dw_ref.dtype)
+
+
+def wu_outer_pallas(pre, mod, idx, scale, *, bk: int, bo: int, bb: int = 128,
+                    interpret: bool = False):
+    b, k = pre.shape
+    j, t = idx.shape
+    assert b % bb == 0, (b, bb)
+    grid = (j, t, b // bb)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda jj, tt, r, idx_ref: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((bb, bk), lambda jj, tt, r, idx_ref: (r, idx_ref[jj, tt])),
+            pl.BlockSpec((bb, bo), lambda jj, tt, r, idx_ref: (r, jj)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bk, bo), lambda jj, tt, r, idx_ref: (jj, tt, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bk, bo), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, n_rows=b // bb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((j, t, bk, bo), pre.dtype),
+        interpret=interpret,
+    )(idx, scale.reshape(1, 1), pre, mod)

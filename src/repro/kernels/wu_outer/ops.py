@@ -1,0 +1,24 @@
+"""Public gated sparse-WU op (padding + dispatch)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import wu_outer_pallas
+
+
+def wu_outer(pre, mod, idx, scale, *, bk: int, bo: int,
+             interpret: bool = False, force_pallas: bool = False):
+    """ΔW_compact = scale · gatherᵢ(pre) ⊗ mod, compact layout only."""
+    scale = jnp.asarray(scale, pre.dtype)
+    if not (force_pallas or jax.default_backend() == "tpu"):
+        return ref.wu_outer(pre, mod, idx, scale, bk, bo)
+    b = pre.shape[0]
+    bb = min(128, b)
+    pad = (-b) % bb
+    if pad:
+        pre = jnp.pad(pre, ((0, pad), (0, 0)))
+        mod = jnp.pad(mod, ((0, pad), (0, 0)))
+    return wu_outer_pallas(pre, mod, idx, scale, bk=bk, bo=bo, bb=bb,
+                           interpret=interpret or jax.default_backend() != "tpu")

@@ -1,0 +1,23 @@
+"""Oracle for the gated three-factor sparse weight update (WU engine).
+
+``dw_compact[j, t] = scale · pre[:, idx[j,t]].T @ mod[:, j·bo:(j+1)·bo]``
+
+i.e. the outer-product update is computed **only for materialised blocks**,
+on the compact layout — the chip never touches pruned synapses. ``scale``
+folds the learning rate and the IA/SS gate (0 when gated off: the whole WU
+is skipped, which is where the 52–65 % power cut comes from).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wu_outer(pre: jax.Array, mod: jax.Array, idx: jax.Array, scale: jax.Array,
+             bk: int, bo: int) -> jax.Array:
+    b, k = pre.shape
+    j, t = idx.shape
+    preb = pre.reshape(b, k // bk, bk)
+    pg = preb[:, idx, :]                                    # [B, J, T, bk]
+    modt = mod.reshape(b, j, bo)
+    return scale * jnp.einsum("bjtk,bjo->jtko", pg, modt)

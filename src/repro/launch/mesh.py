@@ -1,0 +1,46 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (one v5e pod). Multi-pod adds a
+leading "pod" axis: (pod=2, data=16, model=16) = 512 chips; the pod axis
+carries only data parallelism (gradient all-reduce), which is the axis
+layout that extends to N pods — DCN-ish links only ever see the pod axis.
+
+Functions, not module-level constants: importing this module must never
+touch jax device state (the dry-run pins the device count before any jax
+init; tests/benches see 1 device).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devs)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} (dryrun.py sets this)")
+    return jax.sharding.Mesh(
+        np.asarray(devs[:need]).reshape(shape), axes)
+
+
+def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Whatever this process has (tests / local runs): (data=N/model, model)."""
+    devs = jax.devices()
+    data = len(devs) // model
+    return jax.sharding.Mesh(
+        np.asarray(devs[: data * model]).reshape(data, model), ("data", "model"))
+
+
+def dp_axes(mesh: jax.sharding.Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: jax.sharding.Mesh) -> int:
+    return math.prod(mesh.shape[a] for a in dp_axes(mesh))

@@ -1,0 +1,46 @@
+"""Serving: batched prefill + decode with KV/SSM caches.
+
+``make_serve_step`` is the jit-able one-token step the decode dry-run cells
+lower (``decode_32k``, ``long_500k``). ``generate`` is the local loop used
+by examples (greedy or temperature sampling).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+def make_serve_step(cfg: ModelConfig, probe: bool = False):
+    def serve_step(params, cache, tokens):
+        """tokens [B] int32 -> (logits [B, V], new cache)."""
+        return T.decode_step(params, cache, tokens, cfg, probe=probe)
+    return serve_step
+
+
+def generate(params, cfg: ModelConfig, prompt: jax.Array, n_new: int,
+             max_seq: Optional[int] = None, temperature: float = 0.0,
+             rng: Optional[jax.Array] = None) -> jax.Array:
+    """prompt [B, S] -> [B, S + n_new] (greedy when temperature == 0)."""
+    b, s = prompt.shape
+    max_seq = max_seq or (s + n_new)
+    last_logits, cache = T.prefill(params, cfg, prompt, max_seq)
+    step = jax.jit(make_serve_step(cfg))
+
+    def pick(logits, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    toks = [pick(last_logits, rng)]
+    out_cache = cache
+    for i in range(1, n_new):
+        rng, k = jax.random.split(rng)
+        logits, out_cache = step(params, out_cache, toks[-1])
+        toks.append(pick(logits, k))
+    return jnp.concatenate([prompt, jnp.stack(toks, 1)], axis=1)

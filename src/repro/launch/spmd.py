@@ -1,0 +1,86 @@
+"""SPMD context: opt-in mesh-aware optimizations for the model code.
+
+The model functions are mesh-agnostic by default (tests run them on one
+device). The launcher/dry-run activates an ``SpmdCtx`` so the forward pass
+can apply distribution optimizations that need axis names:
+
+* ``seq_shard``  — sequence-parallel layer boundaries (Megatron SP): the
+  residual stream is sharding-constrained to P(dp, "model", None) between
+  blocks, cutting stored-activation memory by the TP width. XLA inserts the
+  all-gather before attention/MLP and the reduce-scatter after — the same
+  bytes the TP all-reduce already paid, but the *saved* tensors are 16×
+  smaller. [§Perf hillclimb, deepseek-67b train_4k]
+* ``shardmap_moe`` — dispatch MoE token scatter/gather inside shard_map so
+  it stays local to each data shard instead of tripping the SPMD
+  partitioner into replicating the dispatch buffer (the mixtral train
+  collective-term pathology). [§Perf, mixtral/moonshot]
+* ``loss_chunk``  — sequence-chunked cross entropy: logits are produced and
+  consumed in [B, chunk, V] slabs under remat, never materialised whole.
+
+Used as:
+
+    with spmd.activate(mesh, seq_shard=True, ...):
+        lowered = jit(step).lower(...)
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class SpmdCtx:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]
+    tp_axis: str = "model"
+    seq_shard: bool = False
+    shardmap_moe: bool = False
+    loss_chunk: int = 0            # 0 = off; else tokens per chunk
+    flash_attn: bool = False       # route attention through the Pallas kernel
+
+
+_state = threading.local()
+
+
+def current() -> Optional[SpmdCtx]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, *, seq_shard: bool = False, shardmap_moe: bool = False,
+             loss_chunk: int = 0, flash_attn: bool = False):
+    from .mesh import dp_axes
+    ctx = SpmdCtx(mesh=mesh, dp_axes=dp_axes(mesh), seq_shard=seq_shard,
+                  shardmap_moe=shardmap_moe, loss_chunk=loss_chunk,
+                  flash_attn=flash_attn)
+    prev = current()
+    _state.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _state.ctx = prev
+
+
+def constrain_seq(h: jax.Array) -> jax.Array:
+    """Residual stream [B, S, D] -> sequence-sharded on the TP axis."""
+    ctx = current()
+    if ctx is None or not ctx.seq_shard:
+        return h
+    b, s, d = h.shape
+    if s % ctx.mesh.shape[ctx.tp_axis]:
+        return h
+    dp = ctx.dp_axes if (b % _dp_size(ctx) == 0 and _dp_size(ctx) > 1) else None
+    return jax.lax.with_sharding_constraint(
+        h, jax.sharding.NamedSharding(ctx.mesh, P(dp, ctx.tp_axis, None)))
+
+
+def _dp_size(ctx: SpmdCtx) -> int:
+    n = 1
+    for a in ctx.dp_axes:
+        n *= ctx.mesh.shape[a]
+    return n

@@ -1,0 +1,180 @@
+"""Training step factory + local training loop driver.
+
+``make_train_step`` builds the jit-able pure step for any pool config:
+
+* ``mode="backprop"`` — standard CE + AdamW (the published-architecture
+  baseline every dry-run cell lowers);
+* ``mode="local"``    — OSSL: per-block predictive+contrastive losses behind
+  stop_gradient + supervised readout on frozen features (the chip's
+  backward-free learning; no inter-layer backward dependency → no backward
+  collectives across stages);
+* ``gating``          — activity-dependent per-layer update skipping
+  (optim/sparse.compute_gates);
+* ``dsst_every``      — connectivity prune/regrow for masked N:M configs.
+
+``run_training`` is the single-host loop used by examples/tests: pipeline,
+checkpoints, recovery hooks. The multi-pod path is the same step function
+jit-ted with the production mesh shardings (launch/dryrun.py proves it
+lowers & compiles; a real fleet would land here with runtime devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.gating import GatingConfig
+from repro.models import transformer as T
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         SparseTrainState, gated_scale_tree, lm_dsst_event)
+from repro.optim.sparse import compute_gates
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    mode: str = "backprop"            # "backprop" | "local"
+    gating: Optional[GatingConfig] = None
+    dsst_every: int = 0               # 0 = static connectivity
+    moe_aux_weight: float = 0.01
+    microbatch: int = 1               # grad-accumulation splits of the batch
+    #   (activation/logit memory scales 1/microbatch; §Perf memory lever)
+    zero1: bool = False               # DP-shard optimizer moments (ZeRO-1)
+
+
+class TrainState:
+    """Bundled (params, opt, sparse) — kept as a plain tuple in jit calls."""
+
+
+def make_train_step(cfg: ModelConfig, hp: TrainHParams, probe: bool = False):
+    local = hp.mode == "local"
+
+    def loss_fn(params, batch):
+        from repro.launch import spmd as spmd_lib
+        ctx = spmd_lib.current()
+        chunked = bool(ctx and ctx.loss_chunk) and not cfg.tie_embeddings
+        logits, aux = T.forward(
+            params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+            local_mode=local, probe=probe, want_hidden=chunked)
+        if chunked:  # logits is the hidden stream; CE in [B, chunk, V] slabs
+            ce = T.lm_loss_chunked(logits, params["lm_head"], batch["labels"],
+                                   ctx.loss_chunk)
+        else:
+            ce = T.lm_loss(logits, batch["labels"])
+        loss = ce + hp.moe_aux_weight * aux["moe_aux"]
+        if local:
+            loss = loss + aux["local_loss"]
+        return loss, (ce, aux)
+
+    def _grad(params, batch):
+        # allow_int: mask/index leaves (bool/int32) ride along with float0 grads
+        return jax.value_and_grad(loss_fn, has_aux=True, allow_int=True)(
+            params, batch)
+
+    def train_step(params, opt_state, sparse_state: SparseTrainState, batch):
+        if hp.microbatch > 1:
+            # gradient accumulation: batch -> microbatch slices scanned with
+            # running-mean grads; activation memory scales 1/microbatch.
+            k = hp.microbatch
+            mb = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+
+            def acc_fn(carry, mbatch):
+                (loss, (ce, aux)), g = _grad(params, mbatch)
+                gsum, lsum, cesum, auxl = carry
+                gsum = jax.tree.map(
+                    lambda a, b: a + (b.astype(jnp.float32) / k
+                                      if jnp.issubdtype(b.dtype, jnp.floating)
+                                      else a * 0),
+                    gsum, g)
+                return (gsum, lsum + loss / k, cesum + ce / k,
+                        jax.tree.map(lambda a, b: a + b / k, auxl, aux)), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32)
+                if jnp.issubdtype(p.dtype, jnp.floating)
+                else jnp.zeros((), jnp.float32), params)
+            aux0 = jax.eval_shape(lambda b: _grad(params, b)[0][1][1],
+                                  jax.tree.map(lambda x: x[0], mb))
+            aux0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), aux0)
+            (grads, loss, ce, aux), _ = jax.lax.scan(
+                acc_fn, (g0, jnp.zeros(()), jnp.zeros(()), aux0), mb)
+        else:
+            (loss, (ce, aux)), grads = _grad(params, batch)
+
+        # --- activity-dependent gated updates (ElfCore WU gating at LM scale)
+        if hp.gating is not None:
+            gates, sparse_state = compute_gates(
+                sparse_state, aux["ia"], aux["pooled"], hp.gating)
+            scale = gated_scale_tree(params, gates, cfg.sparsity)
+            gate_frac = gates.mean()
+        else:
+            scale = gated_scale_tree(params, None, cfg.sparsity) \
+                if cfg.sparsity and cfg.sparsity.mode == "masked" else None
+            gate_frac = jnp.ones(())
+
+        params, opt_state, om = adamw_update(grads, params, opt_state, hp.opt, scale)
+
+        # --- DSST connectivity event (masked N:M configs)
+        if hp.dsst_every and cfg.sparsity and cfg.sparsity.mode == "masked":
+            def ev(p):
+                return lm_dsst_event(p, grads, cfg.sparsity)[0]
+            params = jax.lax.cond(
+                opt_state.step % hp.dsst_every == 0, ev, lambda p: p, params)
+
+        metrics = {"loss": loss, "ce": ce, "gate_frac": gate_frac,
+                   "moe_dropped": aux["moe_dropped"], **om}
+        return params, opt_state, sparse_state, metrics
+
+    return train_step
+
+
+def init_train_state(rng, cfg: ModelConfig, hp: TrainHParams):
+    params = T.init_params(rng, cfg, local_heads=(hp.mode == "local"))
+    opt_state = adamw_init(params)
+    sparse_state = SparseTrainState.init(cfg.n_layers, cfg.d_model)
+    return params, opt_state, sparse_state
+
+
+def run_training(cfg: ModelConfig, hp: TrainHParams, pipeline, n_steps: int,
+                 seed: int = 0, ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 50, log_every: int = 10,
+                 callback=None) -> Tuple[Any, Dict[str, Any]]:
+    """Single-host training loop. Returns (final (params, opt, sparse), history)."""
+    from repro import checkpoint as ckpt
+
+    params, opt_state, sparse_state = init_train_state(
+        jax.random.PRNGKey(seed), cfg, hp)
+    step_fn = jax.jit(make_train_step(cfg, hp), donate_argnums=(0, 1))
+
+    start = 0
+    if ckpt_dir:
+        latest = ckpt.latest_step(ckpt_dir)
+        if latest is not None:
+            start, (params, opt_state, sparse_state), extra = ckpt.restore(
+                ckpt_dir, (params, opt_state, sparse_state))
+            start += 1
+
+    history: Dict[str, list] = {"loss": [], "step": [], "step_time": []}
+    for step in range(start, n_steps):
+        _, batch = next(pipeline) if hasattr(pipeline, "__next__") else (None, pipeline(step))
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        t0 = time.perf_counter()
+        params, opt_state, sparse_state, m = step_fn(
+            params, opt_state, sparse_state, batch)
+        m["loss"].block_until_ready()
+        dt = time.perf_counter() - t0
+        if step % log_every == 0 or step == n_steps - 1:
+            history["loss"].append(float(m["loss"]))
+            history["step"].append(step)
+            history["step_time"].append(dt)
+        if callback:
+            callback(step, m)
+        if ckpt_dir and step % ckpt_every == ckpt_every - 1:
+            ckpt.save(ckpt_dir, step, (params, opt_state, sparse_state),
+                      extra=pipeline.state() if hasattr(pipeline, "state") else {})
+    return (params, opt_state, sparse_state), history

@@ -1,0 +1,8 @@
+"""Composable model zoo covering the assigned architecture pool.
+
+All models are pure functions over parameter pytrees (init / apply), with
+scan-over-layers stacking for compile-time O(1) HLO depth, optional
+activation rematerialisation, and the paper's block-N:M sparsity available
+on every large projection (models/sparse_linear via configs.SparsityConfig).
+"""
+from . import layers, moe, mamba2, transformer  # noqa: F401

@@ -1,0 +1,165 @@
+"""Mamba2 (SSD — state-space duality) block: chunked-parallel training path
+and recurrent decode path over the *same* parameters.
+
+The chunked path follows the SSD algorithm (Dao & Gu, arXiv:2405.21060):
+within a chunk the recurrence is expanded into an attention-like quadratic
+form (MXU-friendly); across chunks a small [H, P, N] state is carried by a
+``lax.scan``. The decode path is the plain per-token recurrence — the long-
+context (``long_500k``) shape runs entirely through it with O(state) memory.
+
+Equivalence of the two paths is a *test* (tests/test_mamba2.py): the duality
+is exactly the kind of claim that silently breaks, so we assert it to 1e-4
+over random inputs.
+
+ElfCore tie-in (DESIGN.md §6): the SSM state is a *trace* in the chip's
+sense; PC-style local learning reads it directly, and the in/out projections
+(the big matmuls) take block-N:M sparsity. The recurrence itself is not a
+weight matmul — N:M is inapplicable there and we say so rather than force it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SparsityConfig
+from .layers import linear_apply, linear_init, rmsnorm
+
+
+def mamba2_init(rng, cfg: ModelConfig, dtype, sp: Optional[SparsityConfig] = None):
+    d, di, ns, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * ns
+    ks = jax.random.split(rng, 4)
+    sp_mlp = sp if (sp and "mlp" in sp.targets) else None
+    return {
+        # z, xBC, dt — fused input projection (the dominant matmul)
+        "in_proj": linear_init(ks[0], d, 2 * di + 2 * ns + h, dtype, sp_mlp),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype),
+        "d_skip": jnp.ones((h,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01))).astype(dtype),
+        "norm_g": jnp.ones((di,), dtype),
+        "out_proj": linear_init(ks[2], di, d, dtype, sp_mlp),
+    }
+
+
+def _split_proj(p, x, cfg: ModelConfig, sp):
+    di, ns, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = linear_apply(p["in_proj"], x, sp)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: 2 * di + 2 * ns]
+    dt = zxbcdt[..., 2 * di + 2 * ns:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over time. xbc [B, S, C], w [W, C]."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1], :] * w[i] for i in range(width))
+    return jax.nn.silu(out + b)
+
+
+def mamba2_forward(p, x: jax.Array, cfg: ModelConfig,
+                   sp: Optional[SparsityConfig] = None,
+                   unroll: bool = False) -> jax.Array:
+    """Chunked SSD over a full sequence. x [B, S, D] -> [B, S, D]."""
+    b, s, d = x.shape
+    di, ns, h, pdim, q = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_chunk
+    assert s % q == 0, (s, q)
+    nc = s // q
+    sp_mlp = sp if (sp and "mlp" in sp.targets) else None
+
+    z, xbc, dt = _split_proj(p, x, cfg, sp_mlp)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di].reshape(b, s, h, pdim)
+    bm = xbc[..., di: di + ns]
+    cm = xbc[..., di + ns:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    da = -jnp.exp(p["a_log"].astype(jnp.float32)) * dt          # [B, S, H] (<=0)
+
+    # chunk views
+    xdt = (xs.astype(jnp.float32) * dt[..., None]).reshape(b, nc, q, h, pdim)
+    bm_c = bm.astype(jnp.float32).reshape(b, nc, q, ns)
+    cm_c = cm.astype(jnp.float32).reshape(b, nc, q, ns)
+    da_c = da.reshape(b, nc, q, h)
+    cs = jnp.cumsum(da_c, axis=2)                               # inclusive [B,NC,Q,H]
+
+    # intra-chunk quadratic ("attention") term
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]           # [B,NC,Q_i,Q_j,H]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    y_diag = jnp.einsum("bcin,bcjn,bcijh,bcjhp->bcihp", cm_c, bm_c, l_mat, xdt)
+
+    # per-chunk local end-state and total decay
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)               # [B,NC,Q,H]
+    local_state = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bm_c, decay_to_end, xdt)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                      # [B,NC,H]
+
+    # inter-chunk recurrence (small state, lax.scan)
+    def scan_fn(s_prev, inp):
+        st, dec = inp
+        return dec[:, :, None, None] * s_prev + st, s_prev
+
+    s0 = jnp.zeros((b, h, pdim, ns), jnp.float32)
+    _, s_prevs = jax.lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(local_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+        unroll=unroll)  # unroll: cost-probe mode (see layers.attn_full_chunked)
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                       # [B,NC,H,P,N]
+
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", cm_c, s_prevs, jnp.exp(cs))
+    y = (y_diag + y_off).reshape(b, s, h, pdim)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+
+    y = rmsnorm(p["norm_g"], y * jax.nn.silu(z), cfg.norm_eps)
+    return linear_apply(p["out_proj"], y, sp_mlp)
+
+
+# ---------------------------------------------------------------------------
+# recurrent decode
+# ---------------------------------------------------------------------------
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int, dtype):
+    di, ns, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    conv_dim = di + 2 * ns
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, h, pdim, ns), jnp.float32),
+    }
+
+
+def mamba2_decode(p, x: jax.Array, cache: Dict[str, jax.Array], cfg: ModelConfig,
+                  sp: Optional[SparsityConfig] = None) -> Tuple[jax.Array, Dict]:
+    """One token. x [B, 1, D] -> ([B, 1, D], new cache)."""
+    b, s, d = x.shape
+    assert s == 1
+    di, ns, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    sp_mlp = sp if (sp and "mlp" in sp.targets) else None
+
+    z, xbc, dt = _split_proj(p, x[:, 0, :], cfg, sp_mlp)
+
+    # conv over the rolling window
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # [B, W, C]
+    conv_out = jax.nn.silu((window * p["conv_w"][None]).sum(axis=1) + p["conv_b"])
+    new_conv = window[:, 1:, :]
+
+    xs = conv_out[..., :di].reshape(b, h, pdim)
+    bm = conv_out[..., di: di + ns]
+    cm = conv_out[..., di + ns:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # [B,H]
+    da = -jnp.exp(p["a_log"].astype(jnp.float32)) * dt
+
+    xdt = xs.astype(jnp.float32) * dt[..., None]                 # [B,H,P]
+    new_ssm = (jnp.exp(da)[:, :, None, None] * cache["ssm"]
+               + xdt[..., None] * bm.astype(jnp.float32)[:, None, None, :])
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, cm.astype(jnp.float32))
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, di).astype(x.dtype)
+
+    y = rmsnorm(p["norm_g"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = linear_apply(p["out_proj"], y, sp_mlp)[:, None, :]
+    return out, {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,414 @@
+"""Model assembly: any pool architecture from one ``ModelConfig``.
+
+* ``init_params``   — stacked per-layer params ([L, ...] leaves) for
+  scan-over-layers (O(1) HLO size at 95 layers), plus embed/head/shared.
+* ``forward``       — train/prefill path. Chunked attention beyond 2k
+  context; per-layer remat; optional OSSL local-update mode (per-block
+  losses behind stop_gradient — the chip's backward-free learning).
+* ``init_cache`` / ``decode_step`` — serving path: GQA KV caches (ring
+  buffer under SWA), Mamba2 recurrent state, Zamba2 shared-block caches.
+* ``lm_loss``       — vocab-sharded cross entropy.
+
+Families: dense | moe | ssm | hybrid | vlm | audio (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import ossl as ossl_lib
+from . import layers as L
+from . import mamba2 as M
+from . import moe as MOE
+
+ATTN_FAMILIES = ("dense", "moe", "vlm", "audio")
+CHUNKED_ATTN_THRESHOLD = 2048
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(rng, cfg: ModelConfig, dtype):
+    p: Dict[str, Any] = {"norm1": L.rmsnorm_init(cfg.d_model, dtype)}
+    if cfg.family in ATTN_FAMILIES:
+        r1, r2 = jax.random.split(rng)
+        p["attn"] = L.attn_init(r1, cfg, dtype, cfg.sparsity)
+        p["norm2"] = L.rmsnorm_init(cfg.d_model, dtype)
+        if cfg.family == "moe":
+            p["moe"] = MOE.moe_init(r2, cfg, dtype, cfg.sparsity)
+        else:
+            p["mlp"] = L.mlp_init(r2, cfg, dtype, cfg.sparsity)
+    else:  # ssm / hybrid trunk
+        p["mixer"] = M.mamba2_init(rng, cfg, dtype, cfg.sparsity)
+    return p
+
+
+def _shared_block_init(rng, cfg: ModelConfig, dtype):
+    """Zamba2's shared attention+MLP block (one set of params, reused)."""
+    r1, r2 = jax.random.split(rng)
+    return {
+        "norm1": L.rmsnorm_init(cfg.d_model, dtype),
+        "attn": L.attn_init(r1, cfg, dtype, None),
+        "norm2": L.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": L.mlp_init(r2, cfg, dtype, None),
+    }
+
+
+def init_params(rng, cfg: ModelConfig, local_heads: bool = False) -> Dict[str, Any]:
+    dtype = _dtype(cfg)
+    r_embed, r_layers, r_head, r_shared, r_local = jax.random.split(rng, 5)
+    layer_keys = jax.random.split(r_layers, cfg.n_layers)
+    params: Dict[str, Any] = {
+        "embed": L.embed_init(r_embed, cfg, dtype),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg, dtype))(layer_keys),
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            r_head, (cfg.d_model, cfg.vocab), dtype) * (cfg.d_model ** -0.5)
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        params["shared"] = _shared_block_init(r_shared, cfg, dtype)
+    if local_heads:  # OSSL predictor heads, one per block
+        hk = jax.random.split(r_local, cfg.n_layers)
+        params["local_heads"] = jax.vmap(
+            lambda k: ossl_lib.local_head_init(k, cfg.d_model, dtype))(hk)
+    return params
+
+
+def init_params_shaped(rng, cfg: ModelConfig, **kw):
+    """eval_shape twin of init_params (no memory) — used by the dry-run."""
+    return jax.eval_shape(lambda r: init_params(r, cfg, **kw), rng)
+
+
+# ---------------------------------------------------------------------------
+# rotary helpers
+# ---------------------------------------------------------------------------
+
+def _angles_for(cfg: ModelConfig, positions, b, s):
+    if cfg.rope_mode == "none":
+        return None
+    if cfg.rope_mode == "mrope":
+        if positions is None:
+            pos1 = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            positions = jnp.stack([pos1] * 3)                   # text-degenerate
+        return L.mrope_angles(positions, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    return L.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+
+def _attn_fn(cfg: ModelConfig, s: int, probe: bool = False):
+    from repro.launch import spmd as spmd_lib
+    ctx = spmd_lib.current()
+    if ctx is not None and ctx.flash_attn and cfg.family in ATTN_FAMILIES:
+        return L.attn_full_flash   # TPU runtime path (kernels/flash_attn)
+    if s > CHUNKED_ATTN_THRESHOLD:
+        return functools.partial(L.attn_full_chunked, q_chunk=512, unroll=probe)
+    return L.attn_full
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _scan_or_loop(f, carry, xs, probe: bool):
+    """lax.scan, or (probe mode) a python loop with *static* per-layer index
+    so layer-position conditionals resolve at trace time and cost_analysis
+    sees each layer's ops exactly once."""
+    if not probe:
+        return jax.lax.scan(f, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        if "idx" in xi:
+            xi["idx"] = i           # python int -> static conditionals
+        carry, y = f(carry, xi)
+        ys.append(y)
+    return carry, jax.tree.map(lambda *z: jnp.stack(z), *ys)
+
+
+def _maybe_cond(pred, true_fn, operand):
+    """lax.cond, or a static python branch when pred is concrete (probe)."""
+    if isinstance(pred, (bool, int)):
+        return true_fn(operand) if pred else operand
+    return jax.lax.cond(pred, true_fn, lambda o: o, operand)
+
+
+def _shared_apply(shared, h, angles, cfg, attn):
+    a, _ = attn(shared["attn"], L.rmsnorm(shared["norm1"], h, cfg.norm_eps), angles, cfg)
+    h = h + a
+    return h + L.mlp_apply(shared["mlp"], L.rmsnorm(shared["norm2"], h, cfg.norm_eps), cfg)
+
+
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None, positions=None,
+            local_mode: bool = False, probe: bool = False,
+            want_hidden: bool = False
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence forward. Returns (logits [B,S,V], aux) — or the final
+    normed hidden states when ``want_hidden`` (chunked-loss path).
+
+    ``probe=True`` is cost-accounting mode (launch/dryrun.py): python loop
+    over layers + unrolled inner scans + no remat, so ``cost_analysis()``
+    sees every op exactly once per execution. Numerically identical.
+    """
+    h = L.embed_apply(params["embed"], tokens, embeds)
+    b, s, _ = h.shape
+    angles = _angles_for(cfg, positions, b, s)
+    attn = _attn_fn(cfg, s, probe)
+    sp = cfg.sparsity
+    shared = params.get("shared")
+    every = cfg.hybrid_attn_every
+
+    def block(carry, xs):
+        h, lloss = carry
+        lp, idx = xs["p"], xs["idx"]
+        h_in = jax.lax.stop_gradient(h) if local_mode else h
+        if cfg.family in ATTN_FAMILIES:
+            a, _ = attn(lp["attn"], L.rmsnorm(lp["norm1"], h_in, cfg.norm_eps), angles, cfg, sp)
+            h1 = h_in + a
+            if cfg.family == "moe":
+                mo, aux = MOE.moe_apply(lp["moe"], L.rmsnorm(lp["norm2"], h1, cfg.norm_eps), cfg, sp)
+                h2 = h1 + mo
+                moe_aux, moe_drop = aux["moe_aux"], aux["moe_dropped"]
+            else:
+                h2 = h1 + L.mlp_apply(lp["mlp"], L.rmsnorm(lp["norm2"], h1, cfg.norm_eps), cfg, sp)
+                moe_aux = moe_drop = jnp.zeros((), jnp.float32)
+        else:
+            h2 = h_in + M.mamba2_forward(lp["mixer"], L.rmsnorm(lp["norm1"], h_in, cfg.norm_eps), cfg, sp)
+            moe_aux = moe_drop = jnp.zeros((), jnp.float32)
+            if shared is not None and every:
+                h2 = _maybe_cond((idx + 1) % every == 0,
+                                 lambda hh: _shared_apply(shared, hh, angles, cfg, attn),
+                                 h2)
+        if local_mode:
+            head = jax.tree.map(lambda x: x[idx], params["local_heads"]) \
+                if "local_heads" in params else None
+            if head is not None:
+                lloss = lloss + ossl_lib.local_loss(h2, head, ossl_lib.OSSLConfig())
+        # sequence-parallel layer boundary (launch/spmd): stored activations
+        # shard S over the TP axis — 16x less remat-saved memory per layer
+        from repro.launch import spmd as spmd_lib
+        h2 = spmd_lib.constrain_seq(h2)
+        # IA / pooled-output stats for the activity-dependent gating engine
+        ia = jnp.abs(h_in).mean().astype(jnp.float32)
+        pooled = h2.mean(axis=(0, 1)).astype(jnp.float32)
+        return (h2, lloss), {"moe_aux": moe_aux, "moe_dropped": moe_drop,
+                             "ia": ia, "pooled": pooled}
+
+    carry = (h, jnp.zeros((), jnp.float32))
+    block_fn = block if (probe or not cfg.remat) else jax.checkpoint(block)
+    xs = {"p": params["layers"], "idx": jnp.arange(cfg.n_layers)}
+    (h, lloss), aux_stack = _scan_or_loop(block_fn, carry, xs, probe)
+
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if local_mode:
+        h = jax.lax.stop_gradient(h)   # readout learns on frozen features (SL layer)
+    if want_hidden:
+        logits = h
+    else:
+        head = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = h @ head
+    aux = {"local_loss": lloss,
+           "moe_aux": aux_stack["moe_aux"].mean(),
+           "moe_dropped": aux_stack["moe_dropped"].mean(),
+           "ia": aux_stack["ia"],            # [L]
+           "pooled": aux_stack["pooled"]}    # [L, D]
+    return logits, aux
+
+
+def lm_loss(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean next-token cross entropy (vocab dim may be model-sharded)."""
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, targets[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def lm_loss_chunked(h: jax.Array, head: jax.Array, targets: jax.Array,
+                    chunk: int) -> jax.Array:
+    """CE over sequence chunks: logits live as [B, chunk, V] slabs under
+    remat — the full [B, S, V] (+f32 copies) is never materialised.
+    (§Perf memory-term lever for large-vocab training cells.)"""
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    nc = s // chunk
+    hc = jnp.moveaxis(h.reshape(b, nc, chunk, d), 1, 0)       # [nc, B, c, D]
+    tc = jnp.moveaxis(targets.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(acc, xt):
+        hh, tt = xt
+        logits = (hh @ head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tt[..., None], axis=-1)[..., 0]
+        return acc + (logz - gold).sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, tc))
+    return total / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / decode step / prefill
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: ModelConfig, max_seq: int) -> int:
+    return min(max_seq, cfg.swa_window) if cfg.swa_window else max_seq
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    dtype = _dtype(cfg)
+    c = cache_len(cfg, max_seq)
+    kv, dh, nl = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family in ATTN_FAMILIES:
+        cache["k"] = jnp.zeros((nl, batch, c, kv, dh), dtype)
+        cache["v"] = jnp.zeros((nl, batch, c, kv, dh), dtype)
+    else:
+        mc = M.mamba2_init_cache(cfg, batch, dtype)
+        cache["conv"] = jnp.zeros((nl,) + mc["conv"].shape, mc["conv"].dtype)
+        cache["ssm"] = jnp.zeros((nl,) + mc["ssm"].shape, mc["ssm"].dtype)
+        if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+            slots = cfg.n_layers // cfg.hybrid_attn_every
+            cache["shared_k"] = jnp.zeros((slots, batch, c, kv, dh), dtype)
+            cache["shared_v"] = jnp.zeros((slots, batch, c, kv, dh), dtype)
+    return cache
+
+
+def decode_step(params, cache, tokens: jax.Array, cfg: ModelConfig,
+                positions=None, probe: bool = False
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decode step. tokens [B] int32 -> (logits [B, V], new cache).
+    ``probe``: cost-accounting mode (see forward)."""
+    sp = cfg.sparsity
+    h = L.embed_apply(params["embed"], tokens[:, None])          # [B,1,D]
+    b = h.shape[0]
+    pos = cache["pos"]
+    if cfg.rope_mode == "mrope":
+        p1 = jnp.broadcast_to(pos[None, None], (b, 1))
+        angles = L.mrope_angles(jnp.stack([p1] * 3), cfg.head_dim,
+                                cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.rope_mode == "rope":
+        angles = L.rope_angles(jnp.broadcast_to(pos[None, None], (b, 1)),
+                               cfg.head_dim, cfg.rope_theta)
+    else:
+        angles = None
+
+    every = cfg.hybrid_attn_every
+    shared = params.get("shared")
+
+    if cfg.family in ATTN_FAMILIES:
+        def block(h, xs):
+            lp, ck, cv = xs["p"], xs["k"], xs["v"]
+            hn = L.rmsnorm(lp["norm1"], h, cfg.norm_eps)
+            a, nk, nv = L.attn_decode(lp["attn"], hn, angles, ck, cv, pos, cfg, sp)
+            h = h + a
+            hn = L.rmsnorm(lp["norm2"], h, cfg.norm_eps)
+            if cfg.family == "moe":
+                mo, _ = MOE.moe_apply(lp["moe"], hn, cfg, sp)
+                h = h + mo
+            else:
+                h = h + L.mlp_apply(lp["mlp"], hn, cfg, sp)
+            return h, {"k": nk, "v": nv}
+
+        xs = {"p": params["layers"], "k": cache["k"], "v": cache["v"],
+              "idx": jnp.arange(cfg.n_layers)}
+        h, new = _scan_or_loop(lambda c, x: block(c, x), h, xs, probe)
+        new_cache = {"pos": pos + 1, "k": new["k"], "v": new["v"]}
+    else:
+        def block(carry, xs):
+            h, sk, sv = carry
+            lp, idx = xs["p"], xs["idx"]
+            hn = L.rmsnorm(lp["norm1"], h, cfg.norm_eps)
+            mc = {"conv": xs["conv"], "ssm": xs["ssm"]}
+            o, nmc = M.mamba2_decode(lp["mixer"], hn, mc, cfg, sp)
+            h = h + o
+
+            if shared is not None and every:
+                slot = (idx + 1) // every - 1
+
+                def with_shared(args):
+                    h, sk, sv = args
+                    ck = jax.lax.dynamic_index_in_dim(sk, slot, 0, keepdims=False)
+                    cv = jax.lax.dynamic_index_in_dim(sv, slot, 0, keepdims=False)
+                    hn = L.rmsnorm(shared["norm1"], h, cfg.norm_eps)
+                    a, nk, nv = L.attn_decode(shared["attn"], hn, angles, ck, cv, pos, cfg)
+                    h2 = h + a
+                    hn2 = L.rmsnorm(shared["norm2"], h2, cfg.norm_eps)
+                    h2 = h2 + L.mlp_apply(shared["mlp"], hn2, cfg)
+                    sk = jax.lax.dynamic_update_index_in_dim(sk, nk, slot, 0)
+                    sv = jax.lax.dynamic_update_index_in_dim(sv, nv, slot, 0)
+                    return h2, sk, sv
+
+                if isinstance(idx, int):    # probe: static layer position
+                    pred = (idx + 1) % every == 0 and slot >= 0
+                else:
+                    pred = ((idx + 1) % every == 0) & (slot >= 0)
+                h, sk, sv = _maybe_cond(pred, with_shared, (h, sk, sv))
+            return (h, sk, sv), {"conv": nmc["conv"], "ssm": nmc["ssm"]}
+
+        sk = cache.get("shared_k", jnp.zeros((1, 1, 1, 1, 1), h.dtype))
+        sv = cache.get("shared_v", jnp.zeros((1, 1, 1, 1, 1), h.dtype))
+        xs = {"p": params["layers"], "conv": cache["conv"], "ssm": cache["ssm"],
+              "idx": jnp.arange(cfg.n_layers)}
+        (h, sk, sv), new = _scan_or_loop(block, (h, sk, sv), xs, probe)
+        new_cache = {"pos": pos + 1, "conv": new["conv"], "ssm": new["ssm"]}
+        if "shared_k" in cache:
+            new_cache["shared_k"], new_cache["shared_v"] = sk, sv
+
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+    return (h @ head)[:, 0, :], new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_seq: int):
+    """Run the full prompt, build a decode cache. Returns (last_logits, cache).
+
+    Simple implementation: forward for logits + a per-layer re-run to collect
+    K/V (attention families). Serving-quality fused prefill is a perf lever,
+    not a correctness need, at our scale.
+    """
+    b, s = tokens.shape
+    logits, _ = forward(params, cfg, tokens=tokens)
+    cache = init_cache(cfg, b, max_seq)
+    if cfg.family in ATTN_FAMILIES:
+        h = L.embed_apply(params["embed"], tokens)
+        angles = _angles_for(cfg, None, b, s)
+        attn = _attn_fn(cfg, s)
+        c = cache_len(cfg, max_seq)
+
+        def block(h, lp):
+            hn = L.rmsnorm(lp["norm1"], h, cfg.norm_eps)
+            a, (k, v) = attn(lp["attn"], hn, angles, cfg, cfg.sparsity)
+            h = h + a
+            hn = L.rmsnorm(lp["norm2"], h, cfg.norm_eps)
+            if cfg.family == "moe":
+                mo, _ = MOE.moe_apply(lp["moe"], hn, cfg, cfg.sparsity)
+                h = h + mo
+            else:
+                h = h + L.mlp_apply(lp["mlp"], hn, cfg, cfg.sparsity)
+            return h, (k, v)
+
+        _, (ks, vs) = jax.lax.scan(block, h, params["layers"])   # [L,B,S,KV,dh]
+        take = min(s, c)
+        # last `take` positions land at slots (pos % c) consistent with decode
+        sl = [(s - take + i) % c for i in range(take)]
+        cache["k"] = cache["k"].at[:, :, jnp.array(sl)].set(ks[:, :, s - take:])
+        cache["v"] = cache["v"].at[:, :, jnp.array(sl)].set(vs[:, :, s - take:])
+        cache["pos"] = jnp.asarray(s, jnp.int32)
+        return logits[:, -1, :], cache
+    # SSM/hybrid: replay tokens through decode_step (state is O(1))
+    def step(cache, t):
+        lg, cache = decode_step(params, cache, t, cfg)
+        return cache, lg
+    cache, lgs = jax.lax.scan(step, cache, tokens.T)
+    return lgs[-1], cache

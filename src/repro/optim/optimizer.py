@@ -1,0 +1,96 @@
+"""AdamW + schedules, pytree-native (no optax dependency offline).
+
+Integer / boolean leaves (sparsity masks ``umask``, kept-row tables
+``rows``) are structural, not trainable: they get no moments and no updates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def _trainable(leaf) -> bool:
+    return jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    def zeros():
+        # fresh buffers each time — m and v must NOT alias (buffer donation)
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32) if _trainable(p)
+            else jnp.zeros((), jnp.int8), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros(), v=zeros())
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree) if _trainable(l)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(grads, params, state: AdamWState, cfg: AdamWConfig,
+                 update_scale=None) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    """One AdamW step. ``update_scale``: optional tree of per-leaf scalars
+    (the activity-dependent gate — 0.0 skips a layer's update, exactly the
+    chip's gated WU applied to the optimizer)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = cosine_schedule(cfg, state.step)
+    t = (state.step + 1).astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(g, p, m, v, s):
+        if not _trainable(p):
+            return p, m, v
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        step_ = lr * (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        step_ = step_ + lr * cfg.weight_decay * p.astype(jnp.float32)
+        if s is not None:
+            step_ = step_ * s
+        return (p.astype(jnp.float32) - step_).astype(p.dtype), m, v
+
+    if update_scale is None:
+        out = jax.tree.map(lambda g, p, m, v: upd(g, p, m, v, None),
+                           grads, params, state.m, state.v)
+    else:  # full tree of scalar gates (no Nones — None is a pytree node)
+        out = jax.tree.map(upd, grads, params, state.m, state.v, update_scale)
+
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(state.step + 1, new_m, new_v), metrics

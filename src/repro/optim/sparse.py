@@ -1,0 +1,160 @@
+"""ElfCore's training-time machinery applied to LM-scale models:
+
+* ``build_update_scale`` — per-leaf optimizer update scales combining
+  (a) the activity-dependent per-layer gate (IA/SS; the chip's gated WU
+  applied to AdamW — a gated-off layer's whole update is skipped) and
+  (b) re-masking of N:M-masked weights (the STE in models/layers gives
+  dense grads for DSST scoring; updates must stay on active connections).
+* ``lm_dsst_event`` — one connectivity prune/regrow pass over every masked
+  matrix in a parameter tree (RigL oracle on the real dense grads; the
+  factorized neuron-level path is validated equivalent in core/dsst).
+* ``SparseTrainState`` — gating statistics carried across steps.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SparsityConfig
+from repro.core import gating as gating_lib
+from repro.core.dsst import prune_regrow
+from repro.core.sparsity import NMSpec
+
+
+class SparseTrainState(NamedTuple):
+    gate: gating_lib.GatingState
+    pooled_ema: jax.Array          # [L, D] per-layer pooled-output EMA (SS ref)
+
+    @staticmethod
+    def init(n_layers: int, d_model: int) -> "SparseTrainState":
+        return SparseTrainState(gate=gating_lib.init_state(n_layers),
+                                pooled_ema=jnp.zeros((n_layers, d_model), jnp.float32))
+
+
+def compute_gates(state: SparseTrainState, ia: jax.Array, pooled: jax.Array,
+                  cfg: gating_lib.GatingConfig, ema_rho: float = 0.05
+                  ) -> Tuple[jax.Array, SparseTrainState]:
+    """ia [L], pooled [L, D] from forward aux -> (gate [L] 0/1, new state)."""
+    def _n(x):
+        return x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + 1e-6)
+    ss = (_n(pooled) * _n(state.pooled_ema)).sum(-1)            # [L]
+    open_, gate_st = gating_lib.gate_batch(state.gate, ia, ss, cfg)
+    ema = (1 - ema_rho) * state.pooled_ema + ema_rho * pooled
+    return open_, SparseTrainState(gate=gate_st, pooled_ema=ema)
+
+
+# ---------------------------------------------------------------------------
+# update-scale tree (gate × mask)
+# ---------------------------------------------------------------------------
+
+def gated_scale_tree(params, gate_vec: Optional[jax.Array],
+                     sp: Optional[SparsityConfig]):
+    """Tree matching ``params``: scalar/broadcast scales for adamw_update.
+
+    Leaves under the stacked ``layers`` subtree get ``gate_vec[l]`` (their
+    leading dim is L); masked ``w`` leaves additionally get the expanded
+    mask so pruned entries receive zero update.
+    """
+    one = jnp.ones((), jnp.float32)
+
+    def expand_mask(node):
+        m = node["umask"]                                       # [..., KB, 1]
+        block = node["w"].shape[-2] // m.shape[-2]
+        return jnp.repeat(m, block, axis=-2).astype(jnp.float32)  # [..., K, 1]
+
+    def rec(node, under_layers: bool):
+        if isinstance(node, dict):
+            has_mask = "umask" in node and "w" in node
+            out = {}
+            for k, v in node.items():
+                if k == "w" and has_mask:
+                    s = expand_mask(node)
+                    if under_layers and gate_vec is not None:
+                        s = s * _lgate(gate_vec, v.ndim)
+                    out[k] = s
+                else:
+                    out[k] = rec(v, under_layers)
+            return out
+        # plain leaf
+        if under_layers and gate_vec is not None:
+            return _lgate(gate_vec, jnp.ndim(node))
+        return one
+
+    def _lgate(gv, ndim):
+        return gv.reshape((-1,) + (1,) * (ndim - 1))
+
+    scales = {}
+    for key, sub in params.items():
+        scales[key] = rec(sub, under_layers=(key in ("layers", "local_heads")))
+    return scales
+
+
+# ---------------------------------------------------------------------------
+# DSST over a parameter tree
+# ---------------------------------------------------------------------------
+
+def _unit_score_shared(x: jax.Array, kb: int) -> jax.Array:
+    """|x| summarised per mask unit for shared-pattern masks: [.., K, O] ->
+    [.., KB, 1] (sum over block rows and all output columns)."""
+    *lead, k, o = x.shape
+    xg = jnp.abs(x).reshape(*lead, kb, k // kb, o)
+    return xg.sum(axis=(-1, -2))[..., None]
+
+
+def lm_dsst_event(params, grads, sp: SparsityConfig) -> Tuple[Any, Dict[str, jax.Array]]:
+    """Prune/regrow every masked matrix; returns (new params, stats)."""
+    spec1 = NMSpec(n=sp.n, m=sp.m)      # unit-granular view ([KB, 1] masks)
+    k_re = max(0, min(sp.n - 1, int(round(sp.n * 0.3))))
+    flips_total = [jnp.zeros(())]
+
+    def one(w, umask, gw):
+        kb = umask.shape[-2]
+        wsc = _unit_score_shared(w, kb)
+        gsc = _unit_score_shared(gw, kb)
+
+        def ev(um, ws, gs):
+            nm, st = prune_regrow(um, ws, gs, spec1, k_re)
+            return nm, st.mask_change
+
+        if w.ndim > 2:   # stacked [L, ...] or experts [L, E, ...]
+            lead = umask.shape[:-2]
+            um2 = umask.reshape((-1,) + umask.shape[-2:])
+            ws2 = wsc.reshape((-1,) + wsc.shape[-2:])
+            gs2 = gsc.reshape((-1,) + gsc.shape[-2:])
+            nm2, fl = jax.vmap(ev)(um2, ws2, gs2)
+            new_umask = nm2.reshape(umask.shape)
+            flip = fl.mean()
+        else:
+            new_umask, flip = ev(umask, wsc, gsc)
+        flips_total[0] = flips_total[0] + flip
+        # survivors keep weights; regrown restart at 0 (apply via mask product)
+        surv = (umask & new_umask)
+        block = w.shape[-2] // kb
+        survf = jnp.repeat(surv, block, axis=-2).astype(w.dtype)
+        return w * survf, new_umask
+
+    def rec(node):
+        if isinstance(node, dict):
+            if "umask" in node and "w" in node:
+                gw = grads_by_id[id(node)]
+                w, um = one(node["w"], node["umask"], gw)
+                return {**node, "w": w, "umask": um}
+            return {k: rec(v) for k, v in node.items()}
+        return node
+
+    # pair each masked node with its grad (walk both trees in lockstep)
+    grads_by_id: Dict[int, jax.Array] = {}
+
+    def pair(pn, gn):
+        if isinstance(pn, dict):
+            if "umask" in pn and "w" in pn:
+                grads_by_id[id(pn)] = gn["w"]
+            else:
+                for k in pn:
+                    pair(pn[k], gn[k])
+
+    pair(params, grads)
+    new_params = rec(params)
+    return new_params, {"dsst_mask_change": flips_total[0]}

@@ -1,0 +1,136 @@
+"""Fault tolerance: failure recovery, elastic re-meshing, straggler policy.
+
+Designed for the 1000+-node posture; exercised here by *simulation* (the
+container has one real device, so failures are injected, not suffered):
+
+* ``run_with_recovery`` — a supervisor loop around a training step: on a
+  (simulated) node failure it restores the latest valid checkpoint and
+  continues; tests assert the continuation is bitwise-identical to an
+  uninterrupted run (determinism = the whole point of step-indexed data).
+* ``elastic_remesh`` — rebuild a smaller/larger mesh and re-shard a pytree
+  onto it with ``jax.device_put`` (the DP axis shrinks when replicas die;
+  params are model-sharded so only the data axis changes).
+* ``HeartbeatMonitor`` / ``StragglerPolicy`` — per-replica step-time EMAs;
+  replicas slower than ``threshold ×`` the fleet median get flagged for
+  (a) hot-spare swap or (b) exclusion at the next elastic boundary. On a
+  real fleet the timings come from the coordinator's heartbeats; tests feed
+  synthetic timings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro import checkpoint as ckpt
+
+
+# ---------------------------------------------------------------------------
+# straggler detection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    threshold: float = 1.5        # x median step time
+    ema: float = 0.3
+    min_steps: int = 3            # grace period before flagging
+
+
+class HeartbeatMonitor:
+    def __init__(self, n_replicas: int, policy: Optional[StragglerPolicy] = None):
+        self.policy = policy or StragglerPolicy()
+        self.ema = np.zeros(n_replicas)
+        self.count = np.zeros(n_replicas, int)
+
+    def record(self, replica: int, step_time: float):
+        a = self.policy.ema
+        if self.count[replica] == 0:
+            self.ema[replica] = step_time
+        else:
+            self.ema[replica] = (1 - a) * self.ema[replica] + a * step_time
+        self.count[replica] += 1
+
+    def stragglers(self) -> List[int]:
+        ready = self.count >= self.policy.min_steps
+        if not ready.any():
+            return []
+        med = float(np.median(self.ema[ready]))
+        flag = ready & (self.ema > self.policy.threshold * med)
+        return [int(i) for i in np.where(flag)[0]]
+
+    def healthy_replicas(self) -> List[int]:
+        bad = set(self.stragglers())
+        return [i for i in range(len(self.ema)) if i not in bad]
+
+
+# ---------------------------------------------------------------------------
+# elastic re-meshing
+# ---------------------------------------------------------------------------
+
+def elastic_remesh(tree: Any, new_mesh: jax.sharding.Mesh,
+                   spec_fn: Callable[[Any], jax.sharding.PartitionSpec]) -> Any:
+    """Re-shard every leaf onto ``new_mesh`` (device_put handles movement)."""
+    def one(path, leaf):
+        spec = spec_fn(path)
+        return jax.device_put(leaf, jax.sharding.NamedSharding(new_mesh, spec))
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected stand-in for a lost node / preempted slice."""
+
+
+# ---------------------------------------------------------------------------
+# supervisor loop
+# ---------------------------------------------------------------------------
+
+def run_with_recovery(
+    step_fn: Callable[[Any, int], Tuple[Any, Dict]],
+    init_state: Any,
+    n_steps: int,
+    ckpt_dir: str,
+    ckpt_every: int = 10,
+    fail_at: Optional[Dict[int, int]] = None,
+    max_restarts: int = 8,
+) -> Tuple[Any, Dict]:
+    """Run ``state, metrics = step_fn(state, step)`` for ``n_steps`` with
+    checkpoint/restart. ``fail_at``: {step: how_many_times} injected faults.
+
+    The state pytree must be fully step-indexed (data position included) so
+    recovery is bitwise-deterministic — asserted by tests/test_fault_tolerance.
+    """
+    fail_at = dict(fail_at or {})
+    restarts = 0
+    log: Dict[str, Any] = {"restarts": 0, "restored_from": []}
+
+    start = ckpt.latest_step(ckpt_dir)
+    if start is not None:
+        _, init_state, _ = ckpt.restore(ckpt_dir, init_state)
+        step = start + 1
+    else:
+        ckpt.save(ckpt_dir, -1, init_state)
+        step = 0
+
+    state = init_state
+    while step < n_steps:
+        try:
+            if fail_at.get(step, 0) > 0:
+                fail_at[step] -= 1
+                raise SimulatedFailure(f"node lost at step {step}")
+            state, _ = step_fn(state, step)
+            if step % ckpt_every == ckpt_every - 1:
+                ckpt.save(ckpt_dir, step, state)
+            step += 1
+        except SimulatedFailure:
+            restarts += 1
+            log["restarts"] = restarts
+            if restarts > max_restarts:
+                raise
+            last = ckpt.latest_step(ckpt_dir)
+            log["restored_from"].append(last)
+            _, state, _ = ckpt.restore(ckpt_dir, state, step=last)
+            step = last + 1
+    return state, log

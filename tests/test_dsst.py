@@ -1,0 +1,97 @@
+"""DSST: prune/regrow invariants + the paper's factorized-sorting claim."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsity as sp
+from repro.core import dsst
+
+
+SPEC = sp.NMSpec(2, 8)
+
+
+def _mask_scores(seed, k=64, o=8, spec=SPEC):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    mask = sp.random_unit_mask(ks[0], spec, k, o)
+    w = jnp.abs(jax.random.normal(ks[1], (k, o)))
+    g = jnp.abs(jax.random.normal(ks[2], (k, o)))
+    return mask, sp.unit_scores(w, spec, k, o), sp.unit_scores(g, spec, k, o)
+
+
+def test_prune_regrow_keeps_nm():
+    mask, ws, gs = _mask_scores(0)
+    new, stats = dsst.prune_regrow(mask, ws, gs, SPEC, k=1)
+    assert bool(sp.check_unit_mask(new, SPEC))
+    assert int(stats.pruned) == int(stats.regrown)
+
+
+def test_prune_drops_smallest_regrows_largest():
+    spec = sp.NMSpec(2, 4)
+    mask = jnp.array([[1], [1], [0], [0]], bool)          # one group, one col
+    ws = jnp.array([[0.1], [5.0], [0.0], [0.0]])          # active scores
+    gs = jnp.array([[0.0], [0.0], [9.0], [1.0]])          # inactive grads
+    new, _ = dsst.prune_regrow(mask, ws, gs, spec, k=1)
+    # smallest active (row 0) dropped; largest-grad inactive (row 2) added
+    assert new[:, 0].tolist() == [False, True, True, False]
+
+
+def test_factored_equals_dense_oracle_rank1():
+    """The paper's neuron-level sorting == dense synapse-level sorting when
+    the gradient is exactly rank-1 (g_ij = pre_i · post_j) — Fig. 5 claim."""
+    for seed in range(10):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        mask = sp.random_unit_mask(ks[0], SPEC, 64, 8)
+        w = jnp.abs(jax.random.normal(ks[1], (64, 8)))
+        ws = sp.unit_scores(w, SPEC, 64, 8)
+        pre = jnp.abs(jax.random.normal(ks[2], (64,))) + 0.01
+        post = jnp.abs(jax.random.normal(jax.random.fold_in(ks[2], 1), (8,))) + 0.01
+        dense_score = sp.unit_scores(jnp.outer(pre, post), SPEC, 64, 8)
+        m_dense, _ = dsst.prune_regrow(mask, ws, dense_score, SPEC, k=1)
+        m_fact, _ = dsst.prune_regrow_factored(mask, ws, pre, post, SPEC, k=1)
+        assert bool((m_dense == m_fact).all()), f"seed {seed}"
+
+
+def test_factored_sort_is_neuron_level():
+    """One argsort of |pre| per group serves every output column."""
+    pre = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (64,)))
+    order = dsst.factored_group_order(pre, SPEC)
+    assert order.shape == (8, 8)        # [G, m] — no output dimension
+    grouped = np.asarray(pre).reshape(8, 8)
+    for g in range(8):
+        assert (np.argsort(-grouped[g], kind="stable") == np.asarray(order[g])).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(0, 1))
+def test_property_dsst_event_preserves_nm(seed, k):
+    mask, ws, gs = _mask_scores(seed)
+    new, _ = dsst.prune_regrow(mask, ws, gs, SPEC, k=k)
+    assert bool(sp.check_unit_mask(new, SPEC))
+
+
+def test_apply_dsst_zeroes_regrown():
+    mask, ws, gs = _mask_scores(3)
+    w = jax.random.normal(jax.random.PRNGKey(9), (64, 8))
+    new_mask, _ = dsst.prune_regrow(mask, ws, gs, SPEC, k=1)
+    w2 = dsst.apply_dsst_to_weights(w, mask, new_mask, SPEC)
+    regrown = sp.expand_unit_mask(new_mask & ~mask, SPEC, 64, 8)
+    assert float(jnp.abs(jnp.where(regrown, w2, 0.0)).max()) == 0.0
+    survived = sp.expand_unit_mask(new_mask & mask, SPEC, 64, 8)
+    np.testing.assert_allclose(jnp.where(survived, w2 - w, 0.0), 0.0)
+
+
+def test_maybe_dsst_period():
+    spec = sp.NMSpec(2, 8)
+    cfg = dsst.DSSTConfig(period=5, prune_frac=0.5)
+    mask = sp.random_unit_mask(jax.random.PRNGKey(0), spec, 32, 4)
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 4))
+    acc = dsst.DSSTAccumulator.init(32, 4)
+    acc = acc.update(jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (32,))),
+                     jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (4,))))
+    w1, m1, _, did1 = dsst.maybe_dsst(3, cfg, spec, w, mask, acc)
+    assert not bool(did1) and bool((m1 == mask).all())
+    w2, m2, _, did2 = dsst.maybe_dsst(4, cfg, spec, w, mask, acc)
+    assert bool(did2)
+    assert bool(sp.check_unit_mask(m2, spec))

@@ -1,0 +1,150 @@
+"""The paper-faithful SNN: dynamics, OSSL learning, gating, DSST end-to-end."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dsst import DSSTConfig
+from repro.core.gating import GatingConfig, skip_rate
+from repro.core.snn import (SNNConfig, accuracy, init_params, init_state,
+                            lif_step, make_eval_fn, make_train_fn, run_sample,
+                            surrogate_grad)
+from repro.core import sparsity as sp
+from repro.data.events import make_task
+
+
+def small_cfg(**kw):
+    base = dict(n_in=64, n_hidden=64, n_out=4, t_steps=16,
+                dsst=DSSTConfig(period=6, prune_frac=0.25))
+    base.update(kw)
+    return SNNConfig(**base)
+
+
+def test_lif_closed_form():
+    """No spikes below threshold: v follows the leaky-integrator geometric sum."""
+    v = jnp.zeros((1, 4))
+    tr = jnp.zeros((1, 4))
+    cur = jnp.full((1, 4), 0.05)
+    alpha = 0.9
+    for _ in range(10):
+        v, tr, s = lif_step(v, tr, cur, alpha=alpha, beta=0.8, theta=1.0)
+        assert float(s.max()) == 0.0
+    expected = 0.05 * (1 - alpha ** 10) / (1 - alpha)
+    np.testing.assert_allclose(v, expected, rtol=1e-5)
+    assert float(tr.max()) == 0.0
+
+
+def test_lif_fires_and_soft_resets():
+    v = jnp.array([[0.96]])
+    v2, tr, s = lif_step(v, jnp.zeros((1, 1)), jnp.array([[0.1]]),
+                         alpha=1.0, beta=0.5, theta=1.0)
+    assert float(s[0, 0]) == 1.0
+    np.testing.assert_allclose(v2, 0.06, atol=1e-6)   # soft reset: v - theta
+    np.testing.assert_allclose(tr, 1.0)
+
+
+def test_surrogate_is_triangular():
+    v = jnp.array([0.0, 0.5, 1.0, 1.5, 2.0])
+    g = surrogate_grad(v, theta=1.0, width=1.0)
+    np.testing.assert_allclose(g, [0.0, 0.5, 1.0, 0.5, 0.0], atol=1e-6)
+
+
+def test_masks_stay_nm_through_training():
+    cfg = small_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    state = init_state(cfg, batch=8)
+    step = make_train_fn(cfg)
+    task = make_task("shd_kws", n_in=64, t_steps=16)
+    rng = np.random.default_rng(0)
+    for i in range(14):   # crosses two DSST events
+        ev, lab = task.sample(rng, 8)
+        params, state, m = step(params, state, jnp.asarray(ev), jnp.asarray(lab))
+    for l, fan_in in enumerate(cfg.layer_fanins):
+        spec = cfg.spec(fan_in)
+        assert bool(sp.check_unit_mask(params["hidden"][l]["mask"], spec))
+        # weights outside the mask must be exactly zero
+        dense = sp.expand_unit_mask(params["hidden"][l]["mask"], spec,
+                                    fan_in, cfg.n_hidden)
+        off = jnp.where(dense, 0.0, params["hidden"][l]["w"])
+        assert float(jnp.abs(off).max()) == 0.0
+    assert not bool(jnp.isnan(m.logits).any())
+
+
+def test_ossl_learns_separable_readout():
+    """After OSSL + SL training, accuracy on held-out samples beats chance
+    clearly (the paper's central claim: hierarchical features without labels)."""
+    cfg = small_cfg(t_steps=20, n_out=10,
+                    dsst=DSSTConfig(period=10, prune_frac=0.25))
+    task = make_task("shd_kws", n_in=64, t_steps=20)   # 10 classes
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    state = init_state(cfg, batch=16)
+    step = make_train_fn(cfg)
+    rng = np.random.default_rng(1)
+    for i in range(150):
+        ev, lab = task.sample(rng, 16)
+        params, state, _ = step(params, state, jnp.asarray(ev), jnp.asarray(lab))
+    eval_fn = make_eval_fn(cfg)
+    state_e = init_state(cfg, batch=64)
+    ev, lab = task.sample(np.random.default_rng(999), 64)
+    _, m = eval_fn(params, state_e, jnp.asarray(ev))
+    acc = float(accuracy(m.logits, jnp.asarray(lab)))
+    assert acc > 0.4, f"accuracy {acc} not well above chance (0.1)"
+
+
+def test_gating_skips_repeats():
+    """Replaying the same sample drives SS up -> gate closes (skip)."""
+    cfg = small_cfg(gating=GatingConfig(enabled=True))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    state = init_state(cfg, batch=8)
+    step = make_train_fn(cfg)
+    task = make_task("nmnist", n_in=64, t_steps=16)
+    ev, lab = task.sample(np.random.default_rng(0), 8)
+    ev, lab = jnp.asarray(ev), jnp.asarray(lab)
+    fracs = []
+    for i in range(10):   # same sample over and over
+        params, state, m = step(params, state, ev, lab)
+        fracs.append(float(m.gate_open_frac))
+    assert np.mean(fracs[5:]) < np.mean(fracs[:2]) + 1e-6
+    assert float(skip_rate(state.gate)) > 0.2
+
+
+def test_gating_disabled_always_open():
+    cfg = small_cfg(gating=GatingConfig(enabled=False), wu_start_frac=0.5)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    state = init_state(cfg, batch=4)
+    task = make_task("gesture", n_in=64, t_steps=16)
+    ev, lab = task.sample(np.random.default_rng(0), 4)
+    params, state, m = run_sample(params, state, jnp.asarray(ev),
+                                  jnp.asarray(lab), cfg, learn=True)
+    assert float(m.gate_open_frac) == 1.0
+    assert float(m.sop_wu) == float(m.sop_wu_offered)
+
+
+def test_sparse_vs_dense_sop_counts():
+    """Forward SOPs scale with density — the zero-skipping energy claim."""
+    task = make_task("gesture", n_in=64, t_steps=16)
+    ev, lab = task.sample(np.random.default_rng(0), 8)
+    outs = {}
+    for name, dense in [("sparse", False), ("dense", True)]:
+        cfg = small_cfg(dense=dense, gating=GatingConfig(enabled=False))
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        state = init_state(cfg, batch=8)
+        _, _, m = run_sample(params, state, jnp.asarray(ev), jnp.asarray(lab),
+                             cfg, learn=True)
+        outs[name] = float(m.sop_forward)
+    ratio = outs["sparse"] / outs["dense"]
+    assert 0.15 < ratio < 0.35    # ~20% density at 80% sparsity
+
+
+def test_bypass_single_hidden_layer():
+    cfg = small_cfg(n_layers=1)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    state = init_state(cfg, batch=4)
+    task = make_task("nav_cue", n_in=64, t_steps=16)
+    ev, lab = task.sample(np.random.default_rng(0), 4)
+    params, state, m = run_sample(params, state, jnp.asarray(ev),
+                                  jnp.asarray(lab), cfg, learn=True)
+    assert m.logits.shape == (4, 4)
+    assert not bool(jnp.isnan(m.logits).any())
