@@ -9,6 +9,7 @@
   fig6  — input-stationary sparse forward path
   fig7  — five tasks: accuracy + modeled µW vs paper numbers
   table1— memory cut / NCE / headline ratios
+  serving — concurrent event-stream serving: throughput/latency/energy
   roofline — per-(arch×shape×mesh) terms from dry-run artifacts (if present)
 """
 from __future__ import annotations
@@ -27,12 +28,13 @@ def main() -> None:
 
     from . import (bench_fig3_serdes, bench_fig4_ossl, bench_fig5_dsst,
                    bench_fig6_datapath, bench_fig7_tasks, bench_kernels,
-                   bench_table1, roofline)
+                   bench_serving_streams, bench_table1, roofline)
     modules = {
         "fig3": bench_fig3_serdes, "fig4": bench_fig4_ossl,
         "fig5": bench_fig5_dsst, "fig6": bench_fig6_datapath,
         "fig7": bench_fig7_tasks, "table1": bench_table1,
-        "kernels": bench_kernels, "roofline": roofline,
+        "kernels": bench_kernels, "serving": bench_serving_streams,
+        "roofline": roofline,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -325,6 +325,199 @@ def _dense_mask(unit_mask, spec: NMSpec, k, o):
     return expand_unit_mask(unit_mask, spec, k, o).astype(jnp.float32)
 
 
+# ---------------------------------------------------------------------------
+# chunked streaming step (serving path)
+# ---------------------------------------------------------------------------
+#
+# ``run_sample`` integrates one aligned batch over a full sample and shares
+# gating / WU statistics across the batch. Serving needs the opposite: many
+# *independent* event streams multiplexed onto the slots of one jitted step,
+# each resuming from carried state at an arbitrary position inside its own
+# T-step window. ``run_chunk`` therefore keeps every quantity per-slot
+# separable:
+#
+# * gating IA/SS and the adaptive SS threshold are per-stream (``ss_mean``
+#   is [S, L], not [L]);
+# * weight updates go into per-stream deltas over a frozen shared base
+#   (``w_eff[s] = w_base + delta[s]``), so one stream's adaptation never
+#   leaks into another slot;
+# * per-slot window counters (``t_in_window``) decide PC-snapshot latching,
+#   the WU window, and the CC roll at window end — streams need not be
+#   aligned;
+# * a ``valid [C, S]`` mask makes ragged chunks and idle slots exact no-ops
+#   (state bit-identical, zero telemetry).
+#
+# This separability is what makes slot multiplexing sound; asserted by the
+# interleaved-vs-solo equivalence test in tests/test_serving_streams.py.
+
+
+class StreamState(NamedTuple):
+    layers: Tuple[LayerState, ...]   # leaves [S, N]
+    x_tr: jax.Array                  # [S, n_in]
+    ss_mean: jax.Array               # [S, L] per-stream adaptive SS threshold
+    t_in_window: jax.Array           # [S] int32, position inside the T-window
+    sample_idx: jax.Array            # [S] int32, windows completed
+
+
+def init_stream_state(cfg: SNNConfig, n_slots: int) -> StreamState:
+    mk = lambda n: LayerState(*(jnp.zeros((n_slots, n)) for _ in range(4)))
+    return StreamState(
+        layers=tuple(mk(cfg.n_hidden) for _ in range(cfg.n_layers)),
+        x_tr=jnp.zeros((n_slots, cfg.n_in)),
+        ss_mean=jnp.full((n_slots, cfg.n_layers), cfg.gating.ss_init,
+                         dtype=jnp.float32),   # explicit dtype: weak-typed
+        # init would force one retrace when the first chunk strong-types it
+        t_in_window=jnp.zeros((n_slots,), jnp.int32),
+        sample_idx=jnp.zeros((n_slots,), jnp.int32),
+    )
+
+
+def init_stream_deltas(cfg: SNNConfig, n_slots: int) -> Tuple[jax.Array, ...]:
+    """Per-stream weight deltas over the frozen shared base, one per layer."""
+    return tuple(jnp.zeros((n_slots, fan_in, cfg.n_hidden))
+                 for fan_in in cfg.layer_fanins)
+
+
+class ChunkMetrics(NamedTuple):
+    logits: jax.Array          # [C, S, n_out] per-timestep readout
+    window_end: jax.Array      # [C, S] bool: logits here close a T-window
+    sop_forward: jax.Array     # [S]
+    sop_wu: jax.Array          # [S]
+    sop_wu_offered: jax.Array  # [S]
+    gate_opened: jax.Array     # [S, L]
+    gate_offered: jax.Array    # [S, L]
+    local_loss: jax.Array      # [S] summed OSSL loss over late TSs
+    steps: jax.Array           # [S] valid timesteps processed
+
+
+def run_chunk(
+    params: Dict[str, Any],
+    deltas: Tuple[jax.Array, ...],
+    state: StreamState,
+    events: jax.Array,          # [C, S, n_in] binary spikes
+    valid: jax.Array,           # [C, S] bool — ragged chunks / idle slots
+    cfg: SNNConfig,
+    *,
+    learn: bool = True,
+) -> Tuple[Tuple[jax.Array, ...], StreamState, ChunkMetrics]:
+    """Advance S independent streams by up to C timesteps each.
+
+    Resumes from carried ``state``; base ``params`` are frozen, adaptation
+    accumulates in per-stream ``deltas``.
+    """
+    specs = [cfg.spec(f) for f in cfg.layer_fanins]
+    t_pc = int(cfg.t_steps * cfg.pc_snapshot_frac)
+    t_wu = int(cfg.t_steps * cfg.wu_start_frac)
+    g = cfg.gating
+    masks_f = [_dense_mask(params["hidden"][l]["mask"], specs[l],
+                           *params["hidden"][l]["w"].shape)
+               for l in range(cfg.n_layers)]
+
+    def ts_body(carry, inp):
+        layers, x_tr, ss_mean, t_win, samp, dls = carry
+        x, val = inp["x"], inp["v"]                  # [S, n_in], [S] bool
+        valf = val.astype(x.dtype)[:, None]
+        x = x * valf
+        x_tr = jnp.where(val[:, None], cfg.beta * x_tr + x, x_tr)
+
+        pre_spikes, pre_trace = x, x_tr
+        new_layers, new_dls = [], []
+        ss_cols, open_cols = [], []
+        sop_fwd = jnp.zeros(events.shape[1])
+        sop_wu = jnp.zeros(events.shape[1])
+        sop_wu_off = jnp.zeros(events.shape[1])
+        loss = jnp.zeros(events.shape[1])
+
+        for l in range(cfg.n_layers):
+            st = layers[l]
+            w = params["hidden"][l]["w"]
+            current = pre_spikes @ w + jnp.einsum("sk,skn->sn", pre_spikes, dls[l])
+            v, tr, s = lif_step(st.v, st.tr, current,
+                                alpha=cfg.alpha, beta=cfg.beta, theta=cfg.theta)
+            tr_pc = jnp.where((t_win == t_pc)[:, None], tr, st.tr_pc)
+
+            # ---- per-stream gated OSSL three-factor update ----
+            mod = ossl_modulator(tr, tr_pc, st.tr_cc, v, cfg)      # [S, N]
+            ia = pre_spikes.mean(-1)                               # [S]
+            ss = _cos(tr, st.tr_cc)                                # [S]
+            thr = g.ss_scale * ss_mean[:, l]
+            open_ = (ia > g.theta_ia) & (ss < thr) if g.enabled \
+                else jnp.ones_like(val)
+            open_ = open_ & val
+            wu_on = open_ & (t_win >= t_wu) & jnp.asarray(learn)
+            scale = jnp.where(wu_on, cfg.lr, 0.0)[:, None, None]
+            dw = scale * pre_trace[:, :, None] * mod[:, None, :]   # [S, K, N]
+            new_dls.append(dls[l] + dw * masks_f[l][None])
+            new_mean = (1 - g.ss_rho) * ss_mean[:, l] + g.ss_rho * jnp.abs(ss)
+            ss_cols.append(jnp.where(val, new_mean, ss_mean[:, l]))
+            open_cols.append(open_)
+
+            # ---- per-slot telemetry ----
+            act_density = specs[l].density
+            sop_fwd += pre_spikes.sum(-1) * cfg.n_hidden * act_density
+            offered = pre_trace.shape[1] * cfg.n_hidden * act_density
+            late = (t_win >= t_wu) & val
+            sop_wu_off += offered * late
+            sop_wu += offered * wu_on
+            loss += (-_cos(tr, tr_pc) + cfg.cc_weight * _cos(tr, st.tr_cc)) * late
+
+            # invalid slots keep their exact previous state
+            v = jnp.where(val[:, None], v, st.v)
+            tr = jnp.where(val[:, None], tr, st.tr)
+            tr_pc = jnp.where(val[:, None], tr_pc, st.tr_pc)
+            new_layers.append(LayerState(v, tr, tr_pc, st.tr_cc))
+            pre_spikes, pre_trace = s * valf, tr
+
+        # readout (bypass): all hidden traces feed the output
+        logits = sum(new_layers[l].tr @ params["readout"][l]
+                     for l in range(cfg.n_layers))
+
+        # ---- per-slot window roll: final trace becomes the CC negative ----
+        at_end = val & (t_win == cfg.t_steps - 1)
+        endf = at_end[:, None]
+        rolled = []
+        for st in new_layers:
+            rolled.append(LayerState(
+                v=jnp.where(endf, 0.0, st.v),
+                tr=jnp.where(endf, 0.0, st.tr),
+                tr_pc=jnp.where(endf, 0.0, st.tr_pc),
+                tr_cc=jnp.where(endf, st.tr, st.tr_cc)))
+        x_tr = jnp.where(endf, 0.0, x_tr)
+        samp = samp + at_end.astype(jnp.int32)
+        t_win = jnp.where(val, (t_win + 1) % cfg.t_steps, t_win)
+
+        out = dict(logits=logits, at_end=at_end, sop_fwd=sop_fwd,
+                   sop_wu=sop_wu, sop_wu_off=sop_wu_off,
+                   opened=jnp.stack(open_cols, -1).astype(jnp.float32),
+                   offered=jnp.tile(val.astype(jnp.float32)[:, None],
+                                    (1, cfg.n_layers)),
+                   loss=loss / cfg.n_layers, steps=val.astype(jnp.float32))
+        carry = (tuple(rolled), x_tr, jnp.stack(ss_cols, -1), t_win, samp,
+                 tuple(new_dls))
+        return carry, out
+
+    carry0 = (state.layers, state.x_tr, state.ss_mean, state.t_in_window,
+              state.sample_idx, tuple(deltas))
+    xs = {"x": events, "v": valid}
+    (layers, x_tr, ss_mean, t_win, samp, dls), outs = jax.lax.scan(
+        ts_body, carry0, xs)
+
+    new_state = StreamState(layers=layers, x_tr=x_tr, ss_mean=ss_mean,
+                            t_in_window=t_win, sample_idx=samp)
+    metrics = ChunkMetrics(
+        logits=outs["logits"],
+        window_end=outs["at_end"],
+        sop_forward=outs["sop_fwd"].sum(0),
+        sop_wu=outs["sop_wu"].sum(0),
+        sop_wu_offered=outs["sop_wu_off"].sum(0),
+        gate_opened=outs["opened"].sum(0),
+        gate_offered=outs["offered"].sum(0),
+        local_loss=outs["loss"].sum(0),
+        steps=outs["steps"].sum(0),
+    )
+    return dls, new_state, metrics
+
+
 # jit entry points -----------------------------------------------------------
 
 def make_train_fn(cfg: SNNConfig):

@@ -45,6 +45,14 @@ class EventTask:
         ev = (rng.random(rates.shape) < rates).astype(np.float32)
         return np.transpose(ev, (1, 0, 2)), labels.astype(np.int32)
 
+    def sample_stream(self, rng: np.random.Generator, n_windows: int):
+        """Yield ``n_windows`` back-to-back samples as a continuous stream:
+        (events [T, n_in], label) per window — the serving-path view, where
+        a "sample" is just a T-step window of an endless sensor stream."""
+        for _ in range(n_windows):
+            ev, lab = self.sample(rng, batch=1)
+            yield ev[:, 0], int(lab[0])
+
 
 def _grid(n_in: int) -> Tuple[int, int]:
     h = int(np.sqrt(n_in / 2))

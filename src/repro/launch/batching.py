@@ -12,16 +12,19 @@ recompilation) and multiplexes requests onto slots:
   are masked out of sampling;
 * retire: EOS or max-tokens frees the slot.
 
-Per-slot position bookkeeping lives in the batcher; the cache itself is the
-model's stacked cache with batch = n_slots. Throughput/fairness stats are
-exposed for the serving benchmark. Decode caches are per-slot independent
-(batch-dim separable) for every family — attention K/V, SSD state, conv
-state — which is what makes slot multiplexing sound; asserted in tests.
+``SlotGrid`` is the family-agnostic bookkeeping half — slot occupancy,
+admit queue, utilization stats — shared with the SNN event-stream scheduler
+(``repro.serving.scheduler``), which multiplexes stateful spiking sessions
+onto the same fixed-grid pattern. Per-slot position bookkeeping lives in
+the batcher; the cache itself is the model's stacked cache with batch =
+n_slots. Decode caches are per-slot independent (batch-dim separable) for
+every family — attention K/V, SSD state, conv state — which is what makes
+slot multiplexing sound; asserted in tests.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Generic, List, Optional, TypeVar
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +32,64 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+
+Item = TypeVar("Item")
+
+
+class SlotGrid(Generic[Item]):
+    """Fixed-slot occupancy bookkeeping: admit queue, occupancy, stats.
+
+    The grid knows nothing about what lives in a slot — token-decode
+    requests and stateful SNN sessions both multiplex through it.
+    """
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.occupant: List[Optional[Item]] = [None] * n_slots
+        self.queue: List[Item] = []
+        self.stats = {"steps": 0, "slot_busy": 0, "admitted": 0, "retired": 0}
+
+    def submit(self, item: Item) -> None:
+        self.queue.append(item)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, o in enumerate(self.occupant) if o is None]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, o in enumerate(self.occupant) if o is not None]
+
+    def admit(self, on_admit: Optional[Callable[[int, Item], None]] = None):
+        """Pop queued items into free slots; returns [(slot, item), ...]."""
+        admitted = []
+        for slot in self.free_slots():
+            if not self.queue:
+                break
+            item = self.queue.pop(0)
+            self.occupant[slot] = item
+            self.stats["admitted"] += 1
+            if on_admit is not None:
+                on_admit(slot, item)
+            admitted.append((slot, item))
+        return admitted
+
+    def retire(self, slot: int) -> Item:
+        item = self.occupant[slot]
+        self.occupant[slot] = None
+        self.stats["retired"] += 1
+        return item
+
+    def tick(self) -> None:
+        self.stats["steps"] += 1
+        self.stats["slot_busy"] += len(self.active_slots())
+
+    @property
+    def drained(self) -> bool:
+        return not self.queue and not self.active_slots()
+
+    @property
+    def utilization(self) -> float:
+        denom = self.stats["steps"] * self.n_slots
+        return self.stats["slot_busy"] / denom if denom else 0.0
 
 
 @dataclasses.dataclass
@@ -48,11 +109,10 @@ class ContinuousBatcher:
         self.eos_id = eos_id
         self.cache = T.init_cache(cfg, n_slots, max_seq)
         # cache["pos"] is global; per-slot positions are ours
-        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.grid: SlotGrid[Request] = SlotGrid(n_slots)
         self.slot_pos = np.zeros(n_slots, np.int64)
-        self.queue: List[Request] = []
         self.finished: List[Request] = []
-        self.stats = {"steps": 0, "tokens_out": 0, "slot_busy": 0}
+        self.stats = {"tokens_out": 0}
 
         def _step(params, cache, tokens):
             return T.decode_step(params, cache, tokens, cfg)
@@ -60,10 +120,7 @@ class ContinuousBatcher:
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: Request):
-        self.queue.append(req)
-
-    def _free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
+        self.grid.submit(req)
 
     def _admit(self):
         """Slot-local prefill: replay prompt tokens through decode steps.
@@ -73,17 +130,14 @@ class ContinuousBatcher:
         their logits. Admission therefore replays prompts in lock-step too —
         simple and correct; per-slot position offsets are bookkept here.
         """
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.pop(0)
-            self.slot_req[slot] = req
+        def on_admit(slot, req):
             self.slot_pos[slot] = 0
             req._fed = 0          # prompt tokens already fed
+        self.grid.admit(on_admit)
 
     def _feed_tokens(self) -> np.ndarray:
         toks = np.zeros(self.n_slots, np.int32)
-        for i, req in enumerate(self.slot_req):
+        for i, req in enumerate(self.grid.occupant):
             if req is None:
                 continue
             if req._fed < len(req.prompt):
@@ -101,11 +155,10 @@ class ContinuousBatcher:
         logits, self.cache = self._step(self.params, self.cache,
                                         jnp.asarray(toks))
         nxt = np.asarray(jnp.argmax(logits, -1))
-        self.stats["steps"] += 1
-        for i, req in enumerate(self.slot_req):
+        self.grid.tick()
+        for i, req in enumerate(self.grid.occupant):
             if req is None:
                 continue
-            self.stats["slot_busy"] += 1
             if req._fed < len(req.prompt):
                 req._fed += 1     # still prefilling: logits discarded
                 if req._fed == len(req.prompt):
@@ -117,17 +170,15 @@ class ContinuousBatcher:
             if (len(req.out) >= req.max_new
                     or (self.eos_id is not None and req.out[-1] == self.eos_id)):
                 req.done = True
-                self.finished.append(req)
-                self.slot_req[i] = None
+                self.finished.append(self.grid.retire(i))
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
-        while (self.queue or any(r is not None for r in self.slot_req)):
+        while not self.grid.drained:
             self.step()
-            if self.stats["steps"] >= max_steps:
+            if self.grid.stats["steps"] >= max_steps:
                 break
         return self.finished
 
     @property
     def utilization(self) -> float:
-        denom = self.stats["steps"] * self.n_slots
-        return self.stats["slot_busy"] / denom if denom else 0.0
+        return self.grid.utilization

@@ -198,6 +198,8 @@ def _lower_one(cfg: ModelConfig, shape: ShapeConfig, mesh, hp: TrainHParams,
 
 def _costs(compiled, n_dev) -> Dict[str, Any]:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jaxlib: one dict per device
+        ca = ca[0] if ca else {}
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),
             "coll": parse_collectives(compiled.as_text(), n_dev)}

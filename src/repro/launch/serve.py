@@ -22,6 +22,16 @@ def make_serve_step(cfg: ModelConfig, probe: bool = False):
     return serve_step
 
 
+def sample_key_chain(rng: jax.Array, n_new: int) -> jax.Array:
+    """Per-position sampling keys: one split of the root into ``n_new`` keys.
+
+    The root itself is never used to sample — consuming it for position 0
+    and then re-splitting it for later positions would make the first
+    sample share lineage with every subsequent key.
+    """
+    return jax.random.split(rng, max(n_new, 1))
+
+
 def generate(params, cfg: ModelConfig, prompt: jax.Array, n_new: int,
              max_seq: Optional[int] = None, temperature: float = 0.0,
              rng: Optional[jax.Array] = None) -> jax.Array:
@@ -37,10 +47,10 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, n_new: int,
         return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
 
     rng = rng if rng is not None else jax.random.PRNGKey(0)
-    toks = [pick(last_logits, rng)]
+    keys = sample_key_chain(rng, n_new)
+    toks = [pick(last_logits, keys[0])]
     out_cache = cache
     for i in range(1, n_new):
-        rng, k = jax.random.split(rng)
         logits, out_cache = step(params, out_cache, toks[-1])
-        toks.append(pick(logits, k))
+        toks.append(pick(logits, keys[i]))
     return jnp.concatenate([prompt, jnp.stack(toks, 1)], axis=1)

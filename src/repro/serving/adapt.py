@@ -1,0 +1,103 @@
+"""Per-stream online OSSL adaptation under serving load.
+
+Parameter layout: a **frozen shared base** (the trained weights every
+stream serves from) plus a **per-stream delta** tensor per hidden layer,
+``[n_slots, fan_in, n_hidden]``. Each slot's effective weights are
+``w_base + delta[slot]``; the activity-dependent gating engine (per-stream
+IA/SS thresholds inside ``core.snn.run_chunk``) decides when a stream's
+delta absorbs a three-factor OSSL update. A silent or repetitive stream
+never pays weight-update energy and never drifts.
+
+This module owns everything *around* the jitted step:
+
+* ``make_chunk_fn`` — jit the chunk step once per (chunk_len, n_slots)
+  geometry; the returned callable is the single compiled artifact the
+  scheduler drives (compilation-count checked in the serving benchmark);
+* per-stream adapt on/off (``adapt_mask``) applied by freezing a lane's
+  delta across the step — exactly equivalent to gating the update off,
+  while trace/threshold state keeps tracking the stream;
+* delta hygiene: multiplicative decay toward the base and a hard clip, so
+  hours-long streams cannot diverge;
+* ``merge_lane_into_base`` — promote one stream's adaptation into the
+  shared base (fleet learning; the hook for DSST-under-traffic later).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.snn import ChunkMetrics, SNNConfig, StreamState, run_chunk
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptConfig:
+    enabled: bool = True
+    delta_decay: float = 1.0     # per-chunk multiplicative decay (1.0 = off)
+    delta_clip: float = 0.5      # hard |delta| bound (0 = off)
+    lr_scale: float = 1.0        # scales cfg.lr for the serving path
+
+
+def make_chunk_fn(cfg: SNNConfig, adapt: AdaptConfig | None = None):
+    """Build the jitted slot-grid step.
+
+    Returns ``fn(params, deltas, state, events, valid, adapt_mask)`` ->
+    ``(deltas, state, metrics)`` with static shapes: ``events`` [C, S, n_in],
+    ``valid`` [C, S] bool, ``adapt_mask`` [S] bool. One compilation serves
+    any number of streams multiplexed through the S slots.
+    """
+    adapt = adapt or AdaptConfig()
+    scfg = cfg if adapt.lr_scale == 1.0 else dataclasses.replace(
+        cfg, lr=cfg.lr * adapt.lr_scale)
+    traces = {"n": 0}   # bumps once per (re)trace — public-API compile count
+
+    @jax.jit
+    def chunk_fn(params, deltas, state: StreamState, events, valid, adapt_mask
+                 ) -> Tuple[Tuple[jax.Array, ...], StreamState, ChunkMetrics]:
+        traces["n"] += 1
+        new_deltas, new_state, metrics = run_chunk(
+            params, deltas, state, events, valid, scfg, learn=adapt.enabled)
+        out = []
+        m = adapt_mask[:, None, None]
+        for old, new in zip(deltas, new_deltas):
+            d = new
+            if adapt.delta_decay < 1.0:
+                d = d * adapt.delta_decay
+            if adapt.delta_clip > 0.0:
+                d = jnp.clip(d, -adapt.delta_clip, adapt.delta_clip)
+            # frozen lanes keep their old delta exactly (no decay/clip drift)
+            out.append(jnp.where(m, d, old))
+        # a frozen lane must not be billed for weight updates either
+        metrics = metrics._replace(
+            sop_wu=metrics.sop_wu * adapt_mask,
+            gate_opened=metrics.gate_opened * adapt_mask[:, None])
+        return tuple(out), new_state, metrics
+
+    chunk_fn.n_traces = lambda: traces["n"]
+    return chunk_fn
+
+
+def delta_norms(deltas: Tuple[jax.Array, ...]) -> jax.Array:
+    """Per-slot L2 norm of the adaptation, summed over layers. [S]."""
+    total = jnp.zeros(deltas[0].shape[0])
+    for d in deltas:
+        total = total + jnp.sqrt((d * d).sum((1, 2)))
+    return total
+
+
+def merge_lane_into_base(params: Dict[str, Any], deltas, slot: int,
+                         cfg: SNNConfig, weight: float = 1.0) -> Dict[str, Any]:
+    """Fold stream ``slot``'s delta into the shared base weights.
+
+    The N:M mask is re-applied so the base stays sparse (deltas are already
+    mask-projected at update time; this re-asserts the invariant exactly).
+    """
+    from repro.core.sparsity import apply_mask
+    new_hidden = []
+    for l, p in enumerate(params["hidden"]):
+        spec = cfg.spec(cfg.layer_fanins[l])
+        w = apply_mask(p["w"] + weight * deltas[l][slot], p["mask"], spec)
+        new_hidden.append({"w": w, "mask": p["mask"]})
+    return {"hidden": new_hidden, "readout": list(params["readout"])}

@@ -1,0 +1,116 @@
+"""Per-stream stateful SNN sessions.
+
+A ``StreamSession`` is the host-side record of one event stream: its
+identity, lifecycle status, buffered-but-unprocessed event chunks, emitted
+window predictions, and accumulated per-stream telemetry. The *device*-side
+state (membrane potentials, the three-trace neuron SRAM, per-stream gate
+thresholds, per-stream weight deltas) lives in batched pytrees whose leading
+axis is the slot index — sessions only remember *which lane* is theirs.
+
+Lane surgery (claiming a slot on admit, snapshotting on retire) is done with
+``write_lane`` / ``read_lane``: tree-maps over the batched pytrees that
+touch exactly one slot index, leaving every other stream's lane
+bit-identical. That single-lane discipline is what the isolation tests pin
+down.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.snn import (SNNConfig, init_stream_deltas, init_stream_state)
+
+
+class SessionStatus(enum.Enum):
+    QUEUED = "queued"
+    ACTIVE = "active"
+    RETIRED = "retired"
+
+
+@dataclasses.dataclass
+class WindowPrediction:
+    """Readout emitted when a session's T-step window closes."""
+    window_idx: int
+    logits: np.ndarray        # [n_out]
+
+    @property
+    def label(self) -> int:
+        return int(np.argmax(self.logits))
+
+
+@dataclasses.dataclass
+class StreamSession:
+    sid: int
+    source: Any = None                      # StreamSource (stream_source.py)
+    adapt: bool = True                      # OSSL adaptation on for this stream
+    status: SessionStatus = SessionStatus.QUEUED
+    slot: Optional[int] = None
+    timesteps_fed: int = 0
+    predictions: List[WindowPrediction] = dataclasses.field(default_factory=list)
+    # buffered events that arrived but have not been stepped yet
+    _pending: List[np.ndarray] = dataclasses.field(default_factory=list)
+    # per-stream snapshot of deltas/state captured at retire (for inspection
+    # or for promoting a stream's adaptation into the shared base)
+    final_deltas: Optional[Tuple[np.ndarray, ...]] = None
+
+    # -- event buffering -----------------------------------------------------
+    def push_events(self, chunk: np.ndarray) -> None:
+        """chunk: [c, n_in] binary spikes, any c >= 1."""
+        if chunk.ndim != 2:
+            raise ValueError(f"chunk must be [c, n_in], got {chunk.shape}")
+        self._pending.append(np.asarray(chunk, np.float32))
+
+    def pending_timesteps(self) -> int:
+        return sum(c.shape[0] for c in self._pending)
+
+    def pop_chunk(self, max_len: int) -> np.ndarray:
+        """Pop up to ``max_len`` buffered timesteps as one [c, n_in] array."""
+        out, need = [], max_len
+        while self._pending and need > 0:
+            head = self._pending[0]
+            if head.shape[0] <= need:
+                out.append(self._pending.pop(0))
+                need -= head.shape[0]
+            else:
+                out.append(head[:need])
+                self._pending[0] = head[need:]
+                need = 0
+        if not out:
+            return np.zeros((0, 0), np.float32)
+        return np.concatenate(out, axis=0)
+
+    @property
+    def exhausted(self) -> bool:
+        """True when the source has ended and no buffered events remain."""
+        src_done = self.source is None or self.source.exhausted
+        return src_done and not self._pending
+
+
+# ---------------------------------------------------------------------------
+# lane surgery over the batched device pytrees
+# ---------------------------------------------------------------------------
+
+def write_lane(batched, single, slot: int):
+    """Write ``single`` (leading axis 1) into lane ``slot`` of ``batched``."""
+    return jax.tree_util.tree_map(
+        lambda b, s: b.at[slot].set(s[0]), batched, single)
+
+
+def read_lane(batched, slot: int):
+    """Extract lane ``slot`` of every leaf, keeping a leading axis of 1."""
+    return jax.tree_util.tree_map(lambda b: b[slot:slot + 1], batched)
+
+
+def fresh_lane_state(cfg: SNNConfig):
+    """A 1-slot initial (state, deltas) pair used to reset a claimed lane."""
+    return init_stream_state(cfg, 1), init_stream_deltas(cfg, 1)
+
+
+def reset_lane(state, deltas, cfg: SNNConfig, slot: int):
+    """Return (state, deltas) with lane ``slot`` re-initialized in place."""
+    s1, d1 = fresh_lane_state(cfg)
+    return write_lane(state, s1, slot), write_lane(deltas, d1, slot)

@@ -1,0 +1,119 @@
+"""Per-stream and fleet-level serving telemetry.
+
+The chip's power story is counted events priced at measured constants
+(core/energy.py); the serving runtime keeps that bookkeeping per stream so
+a fleet operator can answer "which streams are hot, which are coasting on
+the gate, what does a slot-second cost". Counters are monotone by
+construction — every update adds a non-negative per-chunk quantity — and
+per-stream separable: a slot's counters only ever receive that slot's lane
+of the chunk metrics.
+
+``FleetTelemetry`` also tracks host-side step latencies (the wall time of
+one jitted slot-grid step) for the p50/p99 numbers in the serving
+benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.energy import OperatingPoint, report
+
+
+@dataclasses.dataclass
+class StreamCounters:
+    """Monotone per-stream event counters (energy-model inputs)."""
+    sid: int
+    timesteps: float = 0.0
+    events_in: float = 0.0          # input spikes consumed
+    sop_forward: float = 0.0
+    sop_wu: float = 0.0
+    sop_wu_offered: float = 0.0
+    gate_opened: float = 0.0
+    gate_offered: float = 0.0
+    windows: int = 0                # completed T-step windows (predictions)
+    local_loss: float = 0.0
+
+    def add_chunk(self, *, steps, events_in, sop_forward, sop_wu,
+                  sop_wu_offered, gate_opened, gate_offered, windows,
+                  local_loss) -> None:
+        self.timesteps += float(steps)
+        self.events_in += float(events_in)
+        self.sop_forward += float(sop_forward)
+        self.sop_wu += float(sop_wu)
+        self.sop_wu_offered += float(sop_wu_offered)
+        self.gate_opened += float(gate_opened)
+        self.gate_offered += float(gate_offered)
+        self.windows += int(windows)
+        self.local_loss += float(local_loss)
+
+    @property
+    def wu_skip_rate(self) -> float:
+        if self.sop_wu_offered <= 0:
+            return 0.0
+        return 1.0 - self.sop_wu / self.sop_wu_offered
+
+    def energy(self, op: Optional[OperatingPoint] = None) -> dict:
+        rep = report(self.sop_forward, self.sop_wu, self.sop_wu_offered,
+                     self.timesteps, op=op)
+        out = rep.as_dict()
+        out["sid"] = self.sid
+        out["timesteps"] = self.timesteps
+        out["windows"] = self.windows
+        return out
+
+
+class FleetTelemetry:
+    """Rollup across streams + host-side step-latency percentiles."""
+
+    def __init__(self, op: Optional[OperatingPoint] = None):
+        self.op = op or OperatingPoint.low_power()
+        self.streams: Dict[int, StreamCounters] = {}
+        self.step_latencies_s: List[float] = []
+        self.steps = 0
+
+    def stream(self, sid: int) -> StreamCounters:
+        if sid not in self.streams:
+            self.streams[sid] = StreamCounters(sid)
+        return self.streams[sid]
+
+    def record_step(self, latency_s: float) -> None:
+        self.steps += 1
+        self.step_latencies_s.append(float(latency_s))
+
+    # -- rollup --------------------------------------------------------------
+    def latency_percentiles(self) -> dict:
+        if not self.step_latencies_s:
+            return {"p50_ms": 0.0, "p99_ms": 0.0}
+        lat = np.asarray(self.step_latencies_s) * 1e3
+        return {"p50_ms": float(np.percentile(lat, 50)),
+                "p99_ms": float(np.percentile(lat, 99))}
+
+    def rollup(self) -> dict:
+        tot = StreamCounters(sid=-1)
+        for c in self.streams.values():
+            tot.add_chunk(steps=c.timesteps, events_in=c.events_in,
+                          sop_forward=c.sop_forward, sop_wu=c.sop_wu,
+                          sop_wu_offered=c.sop_wu_offered,
+                          gate_opened=c.gate_opened,
+                          gate_offered=c.gate_offered, windows=c.windows,
+                          local_loss=c.local_loss)
+        wall = sum(self.step_latencies_s)
+        out = {
+            "n_streams": len(self.streams),
+            "grid_steps": self.steps,
+            "timesteps": tot.timesteps,
+            "events_in": tot.events_in,
+            "windows": tot.windows,
+            "wu_skip_rate": tot.wu_skip_rate,
+            "fleet_energy": tot.energy(self.op),
+            "events_per_s": tot.events_in / wall if wall > 0 else 0.0,
+            "timesteps_per_s": tot.timesteps / wall if wall > 0 else 0.0,
+            **self.latency_percentiles(),
+        }
+        return out
+
+    def per_stream(self) -> List[dict]:
+        return [c.energy(self.op) for _, c in sorted(self.streams.items())]

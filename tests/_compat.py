@@ -1,0 +1,72 @@
+"""Hypothesis compatibility shim.
+
+Property tests in this repo use a tiny slice of hypothesis
+(``@given``/``@settings`` with ``st.integers``).  The container image does
+not always ship hypothesis, and a missing import must not turn into a
+tier-1 collection error — so test modules import from here instead.  When
+hypothesis is installed we re-export the real thing; otherwise each
+property test runs a handful of deterministic, seeded examples.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: "random.Random"):
+            return self._draw(rng)
+
+    class _strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=(1 << 30)):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+    strategies = _strategies()
+
+    def settings(*_a, **_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**strats):
+        """Run the test ``_FALLBACK_EXAMPLES`` times with seeded draws."""
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                for case in range(_FALLBACK_EXAMPLES):
+                    rng = random.Random(f"{fn.__module__}.{fn.__name__}:{case}")
+                    drawn = {k: s.example(rng) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+            # pytest must not see the wrapped signature, or it would treat
+            # the strategy kwargs as fixtures to inject
+            del wrapper.__dict__["__wrapped__"]
+            wrapper.__signature__ = inspect.Signature(
+                p for p in inspect.signature(fn).parameters.values()
+                if p.name not in strats)
+            return wrapper
+        return deco
