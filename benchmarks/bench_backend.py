@@ -1,0 +1,86 @@
+"""Backend seam comparison: the same timestep engine, different kernels.
+
+``core/engine.py`` routes its three inner ops (forward current, fused LIF,
+WU outer product) through ``SNNConfig.backend``. This module drives one
+jitted training step and one serving chunk step under
+
+* ``ref``               — pure jnp on dense masked weights, and
+* ``pallas-interpret``  — the Pallas kernels in emulation mode (what CPU CI
+                          can check; on a TPU host ``pallas`` runs the real
+                          kernels and this becomes a true perf comparison),
+
+reporting per-step latency and the max |Δ| between the two trajectories —
+the CSV analogue of tests/test_engine_backends.py. Shapes are deliberately
+tiny: interpret mode unrolls every kernel grid point into the trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.snn import (SNNConfig, init_params, init_state,
+                            init_stream_deltas, init_stream_state,
+                            make_train_fn)
+from repro.serving.adapt import make_chunk_fn
+
+BASE = SNNConfig(n_in=16, n_hidden=16, n_layers=2, n_out=4, t_steps=6)
+BACKENDS = ("ref", "pallas-interpret")
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(quick: bool = True):
+    del quick
+    params = init_params(jax.random.PRNGKey(0), BASE)
+    ev = jnp.asarray((np.random.default_rng(0).random(
+        (BASE.t_steps, 8, BASE.n_in)) < 0.3).astype(np.float32))
+    lab = jnp.asarray(np.arange(8) % BASE.n_out)
+    evc = jnp.asarray((np.random.default_rng(1).random(
+        (BASE.t_steps, 4, BASE.n_in)) < 0.3).astype(np.float32))
+    valid = jnp.ones((BASE.t_steps, 4), bool)
+    amask = jnp.ones((4,), bool)
+
+    rows, train_out, serve_out = [], {}, {}
+    for backend in BACKENDS:
+        cfg = dataclasses.replace(BASE, backend=backend)
+        step = make_train_fn(cfg)
+        (p2, _, m), dt_tr = _time(step, params, init_state(cfg, 8), ev, lab)
+        train_out[backend] = (np.asarray(m.logits),
+                              np.asarray(p2["hidden"]["w"]))
+
+        chunk = make_chunk_fn(cfg)
+        (dl, _, cm), dt_sv = _time(
+            chunk, params, init_stream_deltas(cfg, 4),
+            init_stream_state(cfg, 4), evc, valid, amask)
+        serve_out[backend] = (np.asarray(cm.logits), np.asarray(dl))
+        rows.append({"name": f"backend/train_{backend}", "us_per_call": dt_tr,
+                     "derived": f"sop_wu={float(m.sop_wu):.0f}"})
+        rows.append({"name": f"backend/serve_{backend}", "us_per_call": dt_sv,
+                     "derived": f"compiles={chunk.n_traces()}"})
+
+    diff_tr = max(float(np.abs(a - b).max()) for a, b in
+                  zip(train_out["ref"], train_out["pallas-interpret"]))
+    diff_sv = max(float(np.abs(a - b).max()) for a, b in
+                  zip(serve_out["ref"], serve_out["pallas-interpret"]))
+    assert diff_tr < 1e-4 and diff_sv < 1e-4, (diff_tr, diff_sv)
+    rows.append({"name": "backend/parity", "us_per_call": 0.0,
+                 "derived": f"train_maxdiff={diff_tr:.2e};"
+                            f"serve_maxdiff={diff_sv:.2e}"})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

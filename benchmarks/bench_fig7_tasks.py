@@ -53,6 +53,28 @@ def _train_eval(task, cfg, steps, batch=16, seed=0):
             "wu_skip": learn.wu_skip_rate, "gate_skip": float(skip_rate(state.gate))}
 
 
+def depth_sweep(quick: bool = True):
+    """Fig. 7 depth study on the layer-stacked engine: n_layers ∈ {1,2,3,4}.
+
+    One lax.scan over the [L, ...] layer axis (core/engine.py), so depth
+    changes neither trace size nor compile time — only runtime.
+    """
+    steps = 60 if quick else 200
+    task = make_task("shd_kws", n_in=64, t_steps=20)
+    rows = []
+    for depth in (1, 2, 3, 4):
+        cfg = SNNConfig(n_in=64, n_hidden=64, n_out=10, t_steps=20,
+                        n_layers=depth,
+                        dsst=DSSTConfig(period=10, prune_frac=0.25))
+        r = _train_eval(task, cfg, steps)
+        rows.append({
+            "name": f"fig7/depth{depth}",
+            "us_per_call": r["us_per_sample"],
+            "derived": (f"acc={r['acc']:.3f};learn_uW={r['learn_uW']:.1f};"
+                        f"wu_skip={r['wu_skip']:.2f}")})
+    return rows
+
+
 def run(quick: bool = True):
     steps = 100 if quick else 300
     n_in, t_steps = 64, 20           # reduced chip (full 512x50 in examples/)
@@ -78,4 +100,4 @@ def run(quick: bool = True):
                         f"gating_power_cut_vs_zk="
                         f"{1 - sparse['learn_uW'] / max(nogate['learn_uW'], 1e-9):.2f};"
                         f"wu_skip={sparse['wu_skip']:.2f}")})
-    return rows
+    return rows + depth_sweep(quick)

@@ -7,10 +7,14 @@
   fig4  — OSSL ablations (PC/CC/depth/WU-locking)
   fig5  — DSST factorized sorting + accuracy restoration
   fig6  — input-stationary sparse forward path
-  fig7  — five tasks: accuracy + modeled µW vs paper numbers
+  fig7  — five tasks: accuracy + modeled µW vs paper numbers, + depth sweep
   table1— memory cut / NCE / headline ratios
   serving — concurrent event-stream serving: throughput/latency/energy
+  backend — engine backend seam: ref vs pallas-interpret step + parity
   roofline — per-(arch×shape×mesh) terms from dry-run artifacts (if present)
+
+``--dryrun`` only verifies every module imports and registers a ``run``
+callable — the CI smoke step that keeps registration from rotting.
 """
 from __future__ import annotations
 
@@ -23,22 +27,35 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="longer training runs")
     ap.add_argument("--only", default="", help="comma list of module names")
+    ap.add_argument("--dryrun", action="store_true",
+                    help="verify benchmark registration only (CI smoke)")
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (bench_fig3_serdes, bench_fig4_ossl, bench_fig5_dsst,
-                   bench_fig6_datapath, bench_fig7_tasks, bench_kernels,
-                   bench_serving_streams, bench_table1, roofline)
+    from . import (bench_backend, bench_fig3_serdes, bench_fig4_ossl,
+                   bench_fig5_dsst, bench_fig6_datapath, bench_fig7_tasks,
+                   bench_kernels, bench_serving_streams, bench_table1,
+                   roofline)
     modules = {
         "fig3": bench_fig3_serdes, "fig4": bench_fig4_ossl,
         "fig5": bench_fig5_dsst, "fig6": bench_fig6_datapath,
         "fig7": bench_fig7_tasks, "table1": bench_table1,
         "kernels": bench_kernels, "serving": bench_serving_streams,
-        "roofline": roofline,
+        "backend": bench_backend, "roofline": roofline,
     }
     if args.only:
         keep = set(args.only.split(","))
         modules = {k: v for k, v in modules.items() if k in keep}
+
+    if args.dryrun:
+        bad = [k for k, m in modules.items()
+               if not callable(getattr(m, "run", None))]
+        for k in sorted(modules):
+            status = "BROKEN" if k in bad else "REGISTERED"
+            print(f"{k},0.00,{status}")
+        if bad:
+            sys.exit(1)
+        return
 
     print("name,us_per_call,derived")
     failed = 0

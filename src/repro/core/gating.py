@@ -63,14 +63,28 @@ class LayerGate(NamedTuple):
     offered: jax.Array
 
 
+def gate_decide(ss_mean: jax.Array, ia: jax.Array, ss: jax.Array,
+                cfg: GatingConfig):
+    """THE gate formula — shared by the timestep engine (train + serve), the
+    scalar/batch helpers below, and the LM optimizer path.
+
+    Broadcasts over any common shape of (ss_mean, ia, ss): scalars for one
+    training layer, ``[S]`` for per-stream serving slots, ``[L]`` for the
+    LM per-layer batch. Returns (open?, new running-mean SS threshold); the
+    running mean always adapts, whether or not the gate fired.
+    """
+    thr = cfg.ss_scale * ss_mean
+    open_ = (ia > cfg.theta_ia) & (ss < thr)
+    if not cfg.enabled:
+        open_ = jnp.ones_like(open_, bool)
+    new_mean = (1 - cfg.ss_rho) * ss_mean + cfg.ss_rho * jnp.abs(ss)
+    return open_, new_mean
+
+
 def gate_update(state: GatingState, layer: int, ia: jax.Array, ss: jax.Array,
                 cfg: GatingConfig):
     """One gate decision for ``layer``. Returns (open?, per-layer new state)."""
-    thr = cfg.ss_scale * state.ss_mean[layer]
-    open_ = (ia > cfg.theta_ia) & (ss < thr)
-    if not cfg.enabled:
-        open_ = jnp.asarray(True)
-    new_mean = (1 - cfg.ss_rho) * state.ss_mean[layer] + cfg.ss_rho * jnp.abs(ss)
+    open_, new_mean = gate_decide(state.ss_mean[layer], ia, ss, cfg)
     return open_, LayerGate(new_mean,
                             state.opened[layer] + open_.astype(jnp.float32),
                             state.offered[layer] + 1.0)
@@ -89,12 +103,9 @@ def gate_batch(state: GatingState, ia: jax.Array, ss: jax.Array,
     """Vectorised per-layer gate decision (LM training path).
 
     ``ia``, ``ss``: [L]. Returns (open [L] float 0/1, new state)."""
-    thr = cfg.ss_scale * state.ss_mean
-    open_ = (ia > cfg.theta_ia) & (ss < thr)
-    if not cfg.enabled:
-        open_ = jnp.ones_like(open_, bool)
+    open_, new_mean = gate_decide(state.ss_mean, ia, ss, cfg)
     new = GatingState(
-        ss_mean=(1 - cfg.ss_rho) * state.ss_mean + cfg.ss_rho * jnp.abs(ss),
+        ss_mean=new_mean,
         opened=state.opened + open_.astype(jnp.float32),
         offered=state.offered + 1.0,
     )

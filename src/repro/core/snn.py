@@ -2,7 +2,7 @@
 
 Implements the chip of Fig. 2 as a pure-JAX simulator:
 
-* (512)-512-512-16 topology, two hidden LIF layers (each = 4 N:M groups /
+* (512)-512-512-16 topology, hidden LIF layers (each = 4 N:M groups /
   "PEs"), **bypass connections** from every hidden layer to the output, so
   depth can be varied for the Fig. 7 depth study.
 * **Neuron SRAM with three traces per neuron**: the current TS's trace (used
@@ -19,9 +19,24 @@ Implements the chip of Fig. 2 as a pure-JAX simulator:
   adaptive per-layer threshold (core/gating.py).
 * SOP / WU / memory-access counters feed the energy model (core/energy.py).
 
-Everything is jit-compatible; a full sample (T timesteps) is one
-``lax.scan``. Forward integration and weight update happen in the same scan
-step — the chip's "SI and WU run concurrently".
+The per-timestep datapath lives in **core/engine.py** — one layer-stacked
+``layer_timestep`` scanned over a ``[L, ...]`` layer axis, shared by the
+training path (:func:`run_sample`) and the serving path (:func:`run_chunk`),
+with a pluggable ``ref``/``pallas`` backend seam. This module owns the
+network-level layouts and the per-sample bookkeeping around that engine:
+parameter/state initialisation, the SL readout delta rule, DSST events, and
+the CC-slot roll.
+
+Parameter layout (stacked; one leaf per role, leading layer axis)::
+
+    params = {
+      "hidden": {"w":    f32[L, Kmax, n_hidden],   # masked base weights
+                 "mask": bool[L, KBmax, J]},       # N:M unit masks
+      "readout": f32[L, n_hidden, n_out],          # bypass readouts
+    }
+
+``engine.hidden_slice(params, l, cfg)`` gives the per-layer view;
+``engine.stack_params`` migrates PR-1 (list-of-dicts) checkpoints.
 """
 from __future__ import annotations
 
@@ -31,9 +46,12 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import engine
 from . import gating as gating_lib
 from .dsst import (DSSTAccumulator, DSSTConfig, apply_dsst_to_weights,
                    prune_regrow_factored)
+from .engine import (LayerState, _cos, lif_step, ossl_modulator,  # noqa: F401
+                     surrogate_grad)
 from .sparsity import NMSpec, apply_mask, paper_spec_4groups, random_unit_mask, unit_scores
 
 
@@ -45,7 +63,7 @@ from .sparsity import NMSpec, apply_mask, paper_spec_4groups, random_unit_mask, 
 class SNNConfig:
     n_in: int = 512
     n_hidden: int = 512
-    n_layers: int = 2          # hidden layers (1 or 2; bypass keeps output wired)
+    n_layers: int = 2          # hidden layers (bypass keeps output wired)
     n_out: int = 16
     t_steps: int = 50          # timesteps per sample
     # neuron dynamics
@@ -66,6 +84,10 @@ class SNNConfig:
     dsst_enabled: bool = True  # False = static sparse training baseline
     # gating
     gating: gating_lib.GatingConfig = dataclasses.field(default_factory=gating_lib.GatingConfig)
+    # compute backend for the timestep engine (core/engine.py):
+    # "ref" (jnp), "pallas" (kernels; real Pallas on TPU), "pallas-interpret"
+    # (kernels emulated everywhere — the CPU-CI parity mode).
+    backend: str = "ref"
 
     def spec(self, fan_in: int) -> NMSpec:
         if self.dense:
@@ -82,29 +104,30 @@ class SNNConfig:
 # ---------------------------------------------------------------------------
 
 def init_params(rng: jax.Array, cfg: SNNConfig) -> Dict[str, Any]:
-    """Random weights at target sparsity from step 0 (sparse-to-sparse)."""
-    keys = jax.random.split(rng, 2 * cfg.n_layers + 2)
-    params: Dict[str, Any] = {"hidden": [], "readout": []}
+    """Random weights at target sparsity from step 0 (sparse-to-sparse).
+
+    One key per (layer weight, layer mask, layer readout) — readout layers
+    no longer share initial weights at any depth.
+    """
+    geo = engine.geometry(cfg)
+    keys = jax.random.split(rng, 3 * cfg.n_layers)
+    ws, masks = [], []
     for l, fan_in in enumerate(cfg.layer_fanins):
         spec = cfg.spec(fan_in)
         w = jax.random.normal(keys[2 * l], (fan_in, cfg.n_hidden)) * (1.5 / jnp.sqrt(fan_in * spec.density))
         mask = random_unit_mask(keys[2 * l + 1], spec, fan_in, cfg.n_hidden)
-        params["hidden"].append({"w": apply_mask(w, mask, spec), "mask": mask})
-    for l in range(cfg.n_layers):  # bypass: every hidden layer feeds the output
-        wo = jax.random.normal(keys[2 * cfg.n_layers + l % 2], (cfg.n_hidden, cfg.n_out)) * 0.05
-        params["readout"].append(wo)
-    return params
-
-
-class LayerState(NamedTuple):
-    v: jax.Array        # [B, N] membrane
-    tr: jax.Array       # [B, N] current trace (WU slot)
-    tr_pc: jax.Array    # [B, N] earlier-TS snapshot (PC slot)
-    tr_cc: jax.Array    # [B, N] final trace of the previous sample (CC slot)
+        ws.append(engine._pad_rows(apply_mask(w, mask, spec), geo.k_max))
+        masks.append(engine._pad_rows(mask, geo.k_max))
+    readout = jnp.stack([
+        jax.random.normal(keys[2 * cfg.n_layers + l],
+                          (cfg.n_hidden, cfg.n_out)) * 0.05
+        for l in range(cfg.n_layers)])
+    return {"hidden": {"w": jnp.stack(ws), "mask": jnp.stack(masks)},
+            "readout": readout}
 
 
 class NetState(NamedTuple):
-    layers: Tuple[LayerState, ...]
+    layers: LayerState         # leaves [L, B, N]
     x_tr: jax.Array            # [B, K] input (pre-synaptic) trace
     gate: gating_lib.GatingState
     acc: Tuple[DSSTAccumulator, ...]
@@ -112,8 +135,8 @@ class NetState(NamedTuple):
 
 
 def init_state(cfg: SNNConfig, batch: int) -> NetState:
-    mk = lambda n: LayerState(*(jnp.zeros((batch, n)) for _ in range(4)))
-    layers = tuple(mk(cfg.n_hidden) for _ in range(cfg.n_layers))
+    layers = LayerState(*(jnp.zeros((cfg.n_layers, batch, cfg.n_hidden))
+                          for _ in range(4)))
     accs = []
     for fan_in in cfg.layer_fanins:
         spec = cfg.spec(fan_in)
@@ -129,52 +152,7 @@ def init_state(cfg: SNNConfig, batch: int) -> NetState:
 
 
 # ---------------------------------------------------------------------------
-# neuron dynamics (ref path; the Pallas kernel in kernels/lif mirrors this)
-# ---------------------------------------------------------------------------
-
-def lif_step(v, tr, current, *, alpha, beta, theta):
-    """One LIF timestep with soft reset + trace decay. Returns (v', tr', s)."""
-    v = alpha * v + current
-    s = (v >= theta).astype(v.dtype)
-    v = v - s * theta
-    tr = beta * tr + s
-    return v, tr, s
-
-
-def surrogate_grad(v, *, theta, width):
-    """Triangular STE (the chip's STE LUT for the non-derivative spike fn)."""
-    return jnp.maximum(0.0, 1.0 - jnp.abs(v - theta) / (theta * width))
-
-
-def _cos(a, b, eps=1e-6):
-    num = (a * b).sum(-1)
-    den = jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1) + eps
-    return num / den
-
-
-def _cos_grad(a, b, eps=1e-6):
-    """d cos(a,b) / d a."""
-    na = jnp.linalg.norm(a, axis=-1, keepdims=True) + eps
-    nb = jnp.linalg.norm(b, axis=-1, keepdims=True) + eps
-    c = ((a * b).sum(-1, keepdims=True)) / (na * nb)
-    return b / (na * nb) - c * a / (na * na)
-
-
-def ossl_modulator(tr, tr_pc, tr_cc, v, cfg: SNNConfig):
-    """Third factor of the three-factor rule, from purely local quantities.
-
-    Local loss  L = -cos(tr, tr_pc) + cc_weight * cos(tr, tr_cc):
-    *predict* (stay similar to) the earlier-TS trace of the same sample,
-    *contrast* against the previous sample's final trace. The modulator is
-    -dL/dtr shaped through the spike-function surrogate. PC and CC run
-    concurrently (no class-transition flag) — ElfCore §II-C.
-    """
-    g = _cos_grad(tr, tr_pc) - cfg.cc_weight * _cos_grad(tr, tr_cc)
-    return g * surrogate_grad(v, theta=cfg.theta, width=cfg.surrogate_width)
-
-
-# ---------------------------------------------------------------------------
-# one sample (T timesteps), SI + WU concurrent, one lax.scan
+# one sample (T timesteps), SI + WU concurrent, one lax.scan over the engine
 # ---------------------------------------------------------------------------
 
 class SampleMetrics(NamedTuple):
@@ -196,92 +174,43 @@ def run_sample(
     learn: bool = True,
 ) -> Tuple[Dict[str, Any], NetState, SampleMetrics]:
     T, B, _ = events.shape
-    specs = [cfg.spec(f) for f in cfg.layer_fanins]
-    t_pc = int(cfg.t_steps * cfg.pc_snapshot_frac)
+    backend = engine.make_backend(cfg)
     t_wu = int(cfg.t_steps * cfg.wu_start_frac)
+    masks = params["hidden"]["mask"]
+    masks_f = engine.dense_masks(masks, cfg)
+    wrep = engine.prepare_weights(params["hidden"]["w"], masks, cfg, backend)
 
-    def ts_body(carry, inp):
-        t, s_in = inp["t"], inp["x"]
-        layers, x_tr, gate_st, params_h, params_r = carry
-        x_tr = cfg.beta * x_tr + s_in
-
-        new_layers = []
-        pre_spikes, pre_trace = s_in, x_tr
-        sop_fwd = jnp.zeros(())
-        sop_wu = jnp.zeros(())
-        sop_wu_off = jnp.zeros(())
-        gate_open = jnp.zeros(())
-        local_loss = jnp.zeros(())
-        new_params_h = []
-        new_gate = []
-
-        for l in range(cfg.n_layers):
-            p = params_h[l]
-            w_eff = p["w"]  # masked at write-time; stays masked
-            current = pre_spikes @ w_eff
-            st = layers[l]
-            v, tr, s = lif_step(st.v, st.tr, current, alpha=cfg.alpha, beta=cfg.beta, theta=cfg.theta)
-            tr_pc = jnp.where(t == t_pc, tr, st.tr_pc)
-
-            # ---- OSSL three-factor WU, gated, concurrent with SI ----
-            mod = ossl_modulator(tr, tr_pc, st.tr_cc, v, cfg)          # [B, N]
-            ia = pre_spikes.mean()
-            ss = _cos(tr, st.tr_cc).mean()
-            open_, gate_l = gating_lib.gate_update(gate_st, l, ia, ss, cfg.gating)
-            wu_on = open_ & (t >= t_wu) & jnp.asarray(learn)
-            scale = jnp.where(wu_on, cfg.lr / B, 0.0)
-            dw = scale * (pre_trace.T @ mod)                           # [K, N]
-            mask_f = _dense_mask(p["mask"], specs[l], *p["w"].shape)
-            w_new = p["w"] + dw * mask_f
-            new_params_h.append({"w": w_new, "mask": p["mask"]})
-            new_gate.append(gate_l)
-
-            # ---- telemetry (energy model inputs) ----
-            act_density = specs[l].density
-            sop_fwd += pre_spikes.sum() * cfg.n_hidden * act_density
-            offered = B * pre_trace.shape[1] * cfg.n_hidden * act_density
-            sop_wu_off += offered * (t >= t_wu)
-            sop_wu += offered * wu_on
-            gate_open += open_.astype(jnp.float32)
-            local_loss += (-_cos(tr, tr_pc) + cfg.cc_weight * _cos(tr, st.tr_cc)).mean() * (t >= t_wu)
-
-            new_layers.append(LayerState(v, tr, tr_pc, st.tr_cc))
-            pre_spikes, pre_trace = s, tr
-
-        gate_st = gating_lib.merge(gate_st, new_gate)
-
-        # readout (bypass: all hidden traces feed the output)
-        logits = sum(new_layers[l].tr @ params_r[l] for l in range(cfg.n_layers))
-        out = dict(logits=logits, sop_fwd=sop_fwd, sop_wu=sop_wu,
-                   sop_wu_off=sop_wu_off, gate=gate_open / cfg.n_layers,
-                   loss=local_loss / cfg.n_layers)
-        return (tuple(new_layers), x_tr, gate_st, new_params_h, params_r), out
-
-    carry0 = (state.layers, state.x_tr, state.gate, list(params["hidden"]), list(params["readout"]))
-    xs = {"t": jnp.arange(T), "x": events}
-    (layers, x_tr, gate_st, ph, pr), outs = jax.lax.scan(ts_body, carry0, xs)
+    wrep, layers, x_tr, gate_st, outs = engine.scan_sample(
+        wrep, masks_f, params["readout"], state.layers, state.x_tr,
+        state.gate, events, cfg, backend, learn)
+    w_stacked = engine.finalize_weights(wrep, cfg, backend)
 
     logits = outs["logits"][-1]
 
     # ---- SL delta rule on the output layer (labels only used here) ----
+    pr = params["readout"]
     if label is not None and learn:
         err = jax.nn.one_hot(label, cfg.n_out) - jax.nn.softmax(logits)   # [B, n_out]
-        pr = [pr[l] + (cfg.lr_out / B) * (layers[l].tr.T @ err) for l in range(cfg.n_layers)]
+        pr = pr + (cfg.lr_out / B) * jnp.einsum("lbn,bo->lno", layers.tr, err)
 
     # ---- DSST statistics write-back + (maybe) connectivity update ----
-    new_acc = []
-    new_hidden = []
-    pre_traces = [x_tr] + [layers[l].tr for l in range(cfg.n_layers - 1)]
-    for l in range(cfg.n_layers):
-        spec = specs[l]
+    # Once per sample (not per timestep), so the small per-layer Python loop
+    # is fine — and required, since layer fan-ins (and thus mask shapes) may
+    # differ.
+    new_acc, new_w, new_mask = [], [], []
+    geo = engine.geometry(cfg)
+    pre_traces = [x_tr] + [layers.tr[l] for l in range(cfg.n_layers - 1)]
+    for l, fan_in in enumerate(cfg.layer_fanins):
+        spec = cfg.spec(fan_in)
+        kb, jj = spec.unit_counts(fan_in, cfg.n_hidden)
+        w = w_stacked[l, :fan_in, :]
+        mask = masks[l, :kb, :jj]
         pre_mag = jnp.abs(pre_traces[l]).mean(0)                      # [K]
-        mod = ossl_modulator(layers[l].tr, layers[l].tr_pc, layers[l].tr_cc,
-                             layers[l].v, cfg)
+        mod = ossl_modulator(layers.tr[l], layers.tr_pc[l], layers.tr_cc[l],
+                             layers.v[l], cfg)
         post_mag = jnp.abs(mod).mean(0)                               # [N]
-        kb = spec.unit_counts(*ph[l]["w"].shape)[0]
         pre_units = pre_mag.reshape(kb, -1).sum(-1)
         acc = state.acc[l].update(pre_units, post_mag)
-        w, mask = ph[l]["w"], ph[l]["mask"]
         if cfg.dsst_enabled and not cfg.dense and learn:
             def do(args):
                 w, mask, acc = args
@@ -297,15 +226,16 @@ def run_sample(
             w, mask, acc = jax.lax.cond(
                 cfg.dsst.is_update_step(state.sample_idx), do, skip, (w, mask, acc))
         new_acc.append(acc)
-        new_hidden.append({"w": w, "mask": mask})
+        new_w.append(engine._pad_rows(w, geo.k_max))
+        new_mask.append(engine._pad_rows(mask, geo.k_max))
 
     # ---- roll the CC slot: final trace of this sample becomes the negative ----
-    final_layers = tuple(
-        LayerState(v=jnp.zeros_like(st.v), tr=jnp.zeros_like(st.tr),
-                   tr_pc=jnp.zeros_like(st.tr_pc), tr_cc=st.tr)
-        for st in layers)
+    final_layers = LayerState(
+        v=jnp.zeros_like(layers.v), tr=jnp.zeros_like(layers.tr),
+        tr_pc=jnp.zeros_like(layers.tr_pc), tr_cc=layers.tr)
 
-    new_params = {"hidden": new_hidden, "readout": pr}
+    new_params = {"hidden": {"w": jnp.stack(new_w), "mask": jnp.stack(new_mask)},
+                  "readout": pr}
     new_state = NetState(layers=final_layers, x_tr=jnp.zeros_like(x_tr),
                          gate=gate_st, acc=tuple(new_acc),
                          sample_idx=state.sample_idx + 1)
@@ -320,11 +250,6 @@ def run_sample(
     return new_params, new_state, metrics
 
 
-def _dense_mask(unit_mask, spec: NMSpec, k, o):
-    from .sparsity import expand_unit_mask
-    return expand_unit_mask(unit_mask, spec, k, o).astype(jnp.float32)
-
-
 # ---------------------------------------------------------------------------
 # chunked streaming step (serving path)
 # ---------------------------------------------------------------------------
@@ -333,8 +258,8 @@ def _dense_mask(unit_mask, spec: NMSpec, k, o):
 # gating / WU statistics across the batch. Serving needs the opposite: many
 # *independent* event streams multiplexed onto the slots of one jitted step,
 # each resuming from carried state at an arbitrary position inside its own
-# T-step window. ``run_chunk`` therefore keeps every quantity per-slot
-# separable:
+# T-step window. ``run_chunk`` therefore drives the same engine in its
+# per-slot mode:
 #
 # * gating IA/SS and the adaptive SS threshold are per-stream (``ss_mean``
 #   is [S, L], not [L]);
@@ -348,11 +273,16 @@ def _dense_mask(unit_mask, spec: NMSpec, k, o):
 #   (state bit-identical, zero telemetry).
 #
 # This separability is what makes slot multiplexing sound; asserted by the
-# interleaved-vs-solo equivalence test in tests/test_serving_streams.py.
+# interleaved-vs-solo equivalence test in tests/test_serving_streams.py, and
+# the engine-sharing by the train↔serve trajectory-equivalence test in
+# tests/test_train_serve_equivalence.py.
 
 
 class StreamState(NamedTuple):
-    layers: Tuple[LayerState, ...]   # leaves [S, N]
+    layers: LayerState               # leaves [S, L, N] (slot axis leads —
+    #   lane surgery in serving/session.py slices the leading axis of every
+    #   leaf; the engine transposes to its [L, S, N] layout at the
+    #   run_chunk boundary)
     x_tr: jax.Array                  # [S, n_in]
     ss_mean: jax.Array               # [S, L] per-stream adaptive SS threshold
     t_in_window: jax.Array           # [S] int32, position inside the T-window
@@ -360,9 +290,10 @@ class StreamState(NamedTuple):
 
 
 def init_stream_state(cfg: SNNConfig, n_slots: int) -> StreamState:
-    mk = lambda n: LayerState(*(jnp.zeros((n_slots, n)) for _ in range(4)))
+    layers = LayerState(*(jnp.zeros((n_slots, cfg.n_layers, cfg.n_hidden))
+                          for _ in range(4)))
     return StreamState(
-        layers=tuple(mk(cfg.n_hidden) for _ in range(cfg.n_layers)),
+        layers=layers,
         x_tr=jnp.zeros((n_slots, cfg.n_in)),
         ss_mean=jnp.full((n_slots, cfg.n_layers), cfg.gating.ss_init,
                          dtype=jnp.float32),   # explicit dtype: weak-typed
@@ -372,10 +303,11 @@ def init_stream_state(cfg: SNNConfig, n_slots: int) -> StreamState:
     )
 
 
-def init_stream_deltas(cfg: SNNConfig, n_slots: int) -> Tuple[jax.Array, ...]:
-    """Per-stream weight deltas over the frozen shared base, one per layer."""
-    return tuple(jnp.zeros((n_slots, fan_in, cfg.n_hidden))
-                 for fan_in in cfg.layer_fanins)
+def init_stream_deltas(cfg: SNNConfig, n_slots: int) -> jax.Array:
+    """Per-stream weight deltas over the frozen shared base: one stacked
+    ``[S, L, Kmax, n_hidden]`` tensor (slot axis leads for lane surgery)."""
+    geo = engine.geometry(cfg)
+    return jnp.zeros((n_slots, cfg.n_layers, geo.k_max, cfg.n_hidden))
 
 
 class ChunkMetrics(NamedTuple):
@@ -390,120 +322,40 @@ class ChunkMetrics(NamedTuple):
     steps: jax.Array           # [S] valid timesteps processed
 
 
+def _to_engine(tree):
+    """Slot-leading public layout -> layer-leading engine layout."""
+    return jax.tree_util.tree_map(lambda a: jnp.swapaxes(a, 0, 1), tree)
+
+
 def run_chunk(
     params: Dict[str, Any],
-    deltas: Tuple[jax.Array, ...],
+    deltas: jax.Array,          # [S, L, Kmax, n_hidden]
     state: StreamState,
     events: jax.Array,          # [C, S, n_in] binary spikes
     valid: jax.Array,           # [C, S] bool — ragged chunks / idle slots
     cfg: SNNConfig,
     *,
     learn: bool = True,
-) -> Tuple[Tuple[jax.Array, ...], StreamState, ChunkMetrics]:
+) -> Tuple[jax.Array, StreamState, ChunkMetrics]:
     """Advance S independent streams by up to C timesteps each.
 
     Resumes from carried ``state``; base ``params`` are frozen, adaptation
     accumulates in per-stream ``deltas``.
     """
-    specs = [cfg.spec(f) for f in cfg.layer_fanins]
-    t_pc = int(cfg.t_steps * cfg.pc_snapshot_frac)
-    t_wu = int(cfg.t_steps * cfg.wu_start_frac)
-    g = cfg.gating
-    masks_f = [_dense_mask(params["hidden"][l]["mask"], specs[l],
-                           *params["hidden"][l]["w"].shape)
-               for l in range(cfg.n_layers)]
+    backend = engine.make_backend(cfg)
+    masks = params["hidden"]["mask"]
+    masks_f = engine.dense_masks(masks, cfg)
+    wrep = engine.prepare_weights(params["hidden"]["w"], masks, cfg, backend)
 
-    def ts_body(carry, inp):
-        layers, x_tr, ss_mean, t_win, samp, dls = carry
-        x, val = inp["x"], inp["v"]                  # [S, n_in], [S] bool
-        valf = val.astype(x.dtype)[:, None]
-        x = x * valf
-        x_tr = jnp.where(val[:, None], cfg.beta * x_tr + x, x_tr)
+    (layers, x_tr, ss_mean, t_win, samp, dls), outs = engine.scan_chunk(
+        wrep, masks_f, params["readout"], _to_engine(deltas),
+        _to_engine(state.layers), state.x_tr, state.ss_mean.T,
+        state.t_in_window, state.sample_idx, events, valid, cfg, backend,
+        learn)
 
-        pre_spikes, pre_trace = x, x_tr
-        new_layers, new_dls = [], []
-        ss_cols, open_cols = [], []
-        sop_fwd = jnp.zeros(events.shape[1])
-        sop_wu = jnp.zeros(events.shape[1])
-        sop_wu_off = jnp.zeros(events.shape[1])
-        loss = jnp.zeros(events.shape[1])
-
-        for l in range(cfg.n_layers):
-            st = layers[l]
-            w = params["hidden"][l]["w"]
-            current = pre_spikes @ w + jnp.einsum("sk,skn->sn", pre_spikes, dls[l])
-            v, tr, s = lif_step(st.v, st.tr, current,
-                                alpha=cfg.alpha, beta=cfg.beta, theta=cfg.theta)
-            tr_pc = jnp.where((t_win == t_pc)[:, None], tr, st.tr_pc)
-
-            # ---- per-stream gated OSSL three-factor update ----
-            mod = ossl_modulator(tr, tr_pc, st.tr_cc, v, cfg)      # [S, N]
-            ia = pre_spikes.mean(-1)                               # [S]
-            ss = _cos(tr, st.tr_cc)                                # [S]
-            thr = g.ss_scale * ss_mean[:, l]
-            open_ = (ia > g.theta_ia) & (ss < thr) if g.enabled \
-                else jnp.ones_like(val)
-            open_ = open_ & val
-            wu_on = open_ & (t_win >= t_wu) & jnp.asarray(learn)
-            scale = jnp.where(wu_on, cfg.lr, 0.0)[:, None, None]
-            dw = scale * pre_trace[:, :, None] * mod[:, None, :]   # [S, K, N]
-            new_dls.append(dls[l] + dw * masks_f[l][None])
-            new_mean = (1 - g.ss_rho) * ss_mean[:, l] + g.ss_rho * jnp.abs(ss)
-            ss_cols.append(jnp.where(val, new_mean, ss_mean[:, l]))
-            open_cols.append(open_)
-
-            # ---- per-slot telemetry ----
-            act_density = specs[l].density
-            sop_fwd += pre_spikes.sum(-1) * cfg.n_hidden * act_density
-            offered = pre_trace.shape[1] * cfg.n_hidden * act_density
-            late = (t_win >= t_wu) & val
-            sop_wu_off += offered * late
-            sop_wu += offered * wu_on
-            loss += (-_cos(tr, tr_pc) + cfg.cc_weight * _cos(tr, st.tr_cc)) * late
-
-            # invalid slots keep their exact previous state
-            v = jnp.where(val[:, None], v, st.v)
-            tr = jnp.where(val[:, None], tr, st.tr)
-            tr_pc = jnp.where(val[:, None], tr_pc, st.tr_pc)
-            new_layers.append(LayerState(v, tr, tr_pc, st.tr_cc))
-            pre_spikes, pre_trace = s * valf, tr
-
-        # readout (bypass): all hidden traces feed the output
-        logits = sum(new_layers[l].tr @ params["readout"][l]
-                     for l in range(cfg.n_layers))
-
-        # ---- per-slot window roll: final trace becomes the CC negative ----
-        at_end = val & (t_win == cfg.t_steps - 1)
-        endf = at_end[:, None]
-        rolled = []
-        for st in new_layers:
-            rolled.append(LayerState(
-                v=jnp.where(endf, 0.0, st.v),
-                tr=jnp.where(endf, 0.0, st.tr),
-                tr_pc=jnp.where(endf, 0.0, st.tr_pc),
-                tr_cc=jnp.where(endf, st.tr, st.tr_cc)))
-        x_tr = jnp.where(endf, 0.0, x_tr)
-        samp = samp + at_end.astype(jnp.int32)
-        t_win = jnp.where(val, (t_win + 1) % cfg.t_steps, t_win)
-
-        out = dict(logits=logits, at_end=at_end, sop_fwd=sop_fwd,
-                   sop_wu=sop_wu, sop_wu_off=sop_wu_off,
-                   opened=jnp.stack(open_cols, -1).astype(jnp.float32),
-                   offered=jnp.tile(val.astype(jnp.float32)[:, None],
-                                    (1, cfg.n_layers)),
-                   loss=loss / cfg.n_layers, steps=val.astype(jnp.float32))
-        carry = (tuple(rolled), x_tr, jnp.stack(ss_cols, -1), t_win, samp,
-                 tuple(new_dls))
-        return carry, out
-
-    carry0 = (state.layers, state.x_tr, state.ss_mean, state.t_in_window,
-              state.sample_idx, tuple(deltas))
-    xs = {"x": events, "v": valid}
-    (layers, x_tr, ss_mean, t_win, samp, dls), outs = jax.lax.scan(
-        ts_body, carry0, xs)
-
-    new_state = StreamState(layers=layers, x_tr=x_tr, ss_mean=ss_mean,
-                            t_in_window=t_win, sample_idx=samp)
+    new_state = StreamState(layers=_to_engine(layers), x_tr=x_tr,
+                            ss_mean=ss_mean.T, t_in_window=t_win,
+                            sample_idx=samp)
     metrics = ChunkMetrics(
         logits=outs["logits"],
         window_end=outs["at_end"],
@@ -515,7 +367,7 @@ def run_chunk(
         local_loss=outs["loss"].sum(0),
         steps=outs["steps"].sum(0),
     )
-    return dls, new_state, metrics
+    return _to_engine(dls), new_state, metrics
 
 
 # jit entry points -----------------------------------------------------------

@@ -66,16 +66,39 @@ def _bwd(interpret, force_pallas, res, dy):
 nm_spmm.defvjp(_fwd, _bwd)
 
 
-def make_compact(w_dense: jax.Array, unit_mask: jax.Array, bk: int, bo: int):
+def make_compact(w_dense: jax.Array, unit_mask: jax.Array, bk: int, bo: int,
+                 n_kept: int | None = None):
     """Dense [K, O] + unit mask [K/bk, O/bo] -> (w_compact [J,T,bk,bo], idx [J,T]).
 
     Every out tile must keep the same *count* of blocks (N:M guarantees it).
+    Pass ``n_kept`` (= G·n, known statically from the spec) when the mask is
+    a tracer — e.g. building the compact carry inside a jitted step.
     """
     k, o = w_dense.shape
     kb, j = unit_mask.shape
     assert kb == k // bk and j == o // bo
-    t = int(unit_mask[:, 0].sum())
+    t = int(unit_mask[:, 0].sum()) if n_kept is None else n_kept
     idx = jnp.argsort(~unit_mask, axis=0, stable=True)[:t].T.astype(jnp.int32)  # [J, T]
     wb = w_dense.reshape(kb, bk, j, bo).transpose(2, 0, 1, 3)  # [J, KB, bk, bo]
     w_compact = jnp.take_along_axis(wb, idx[:, :, None, None], axis=1)
     return w_compact, idx
+
+
+def nm_spmm_batched(x, w_compact, idx, *, interpret: bool = False,
+                    force_pallas: bool = False):
+    """Row-count-agnostic forward dispatch (no custom VJP).
+
+    The engine's local learning rules never backprop through the forward
+    matmul, so this skips the ``custom_vjp`` wrapper and simply pads the
+    row dimension to the kernel's ``bm`` tile before dispatching.
+    """
+    if not _use_pallas(force_pallas):
+        return ref.nm_spmm(x, w_compact, idx)
+    b = x.shape[0]
+    bm = 128 if b >= 128 else 8
+    pad = (-b) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    y = nm_spmm_pallas(x, w_compact, idx, bm=bm,
+                       interpret=interpret or jax.default_backend() != "tpu")
+    return y[:b]

@@ -29,6 +29,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine
 from repro.core.snn import ChunkMetrics, SNNConfig, StreamState, run_chunk
 
 
@@ -55,49 +56,43 @@ def make_chunk_fn(cfg: SNNConfig, adapt: AdaptConfig | None = None):
 
     @jax.jit
     def chunk_fn(params, deltas, state: StreamState, events, valid, adapt_mask
-                 ) -> Tuple[Tuple[jax.Array, ...], StreamState, ChunkMetrics]:
+                 ) -> Tuple[jax.Array, StreamState, ChunkMetrics]:
         traces["n"] += 1
         new_deltas, new_state, metrics = run_chunk(
             params, deltas, state, events, valid, scfg, learn=adapt.enabled)
-        out = []
-        m = adapt_mask[:, None, None]
-        for old, new in zip(deltas, new_deltas):
-            d = new
-            if adapt.delta_decay < 1.0:
-                d = d * adapt.delta_decay
-            if adapt.delta_clip > 0.0:
-                d = jnp.clip(d, -adapt.delta_clip, adapt.delta_clip)
-            # frozen lanes keep their old delta exactly (no decay/clip drift)
-            out.append(jnp.where(m, d, old))
+        d = new_deltas                           # [S, L, Kmax, N]
+        if adapt.delta_decay < 1.0:
+            d = d * adapt.delta_decay
+        if adapt.delta_clip > 0.0:
+            d = jnp.clip(d, -adapt.delta_clip, adapt.delta_clip)
+        # frozen lanes keep their old delta exactly (no decay/clip drift)
+        out = jnp.where(adapt_mask[:, None, None, None], d, deltas)
         # a frozen lane must not be billed for weight updates either
         metrics = metrics._replace(
             sop_wu=metrics.sop_wu * adapt_mask,
             gate_opened=metrics.gate_opened * adapt_mask[:, None])
-        return tuple(out), new_state, metrics
+        return out, new_state, metrics
 
     chunk_fn.n_traces = lambda: traces["n"]
     return chunk_fn
 
 
-def delta_norms(deltas: Tuple[jax.Array, ...]) -> jax.Array:
-    """Per-slot L2 norm of the adaptation, summed over layers. [S]."""
-    total = jnp.zeros(deltas[0].shape[0])
-    for d in deltas:
-        total = total + jnp.sqrt((d * d).sum((1, 2)))
-    return total
+def delta_norms(deltas: jax.Array) -> jax.Array:
+    """Per-slot L2 norm of the adaptation, summed over layers. [S].
+
+    ``deltas``: the stacked ``[S, L, Kmax, N]`` per-stream tensor.
+    """
+    return jnp.sqrt((deltas * deltas).sum((2, 3))).sum(1)
 
 
-def merge_lane_into_base(params: Dict[str, Any], deltas, slot: int,
+def merge_lane_into_base(params: Dict[str, Any], deltas: jax.Array, slot: int,
                          cfg: SNNConfig, weight: float = 1.0) -> Dict[str, Any]:
     """Fold stream ``slot``'s delta into the shared base weights.
 
     The N:M mask is re-applied so the base stays sparse (deltas are already
     mask-projected at update time; this re-asserts the invariant exactly).
     """
-    from repro.core.sparsity import apply_mask
-    new_hidden = []
-    for l, p in enumerate(params["hidden"]):
-        spec = cfg.spec(cfg.layer_fanins[l])
-        w = apply_mask(p["w"] + weight * deltas[l][slot], p["mask"], spec)
-        new_hidden.append({"w": w, "mask": p["mask"]})
-    return {"hidden": new_hidden, "readout": list(params["readout"])}
+    masks_f = engine.dense_masks(params["hidden"]["mask"], cfg)
+    w = (params["hidden"]["w"] + weight * deltas[slot]) * masks_f
+    return {"hidden": {"w": w, "mask": params["hidden"]["mask"]},
+            "readout": params["readout"]}

@@ -73,7 +73,7 @@ class StreamScheduler:
 
     def _retire(self, slot: int) -> None:
         sess = self.grid.occupant[slot]
-        sess.final_deltas = tuple(np.asarray(d[slot]) for d in self.deltas)
+        sess.final_deltas = np.asarray(self.deltas[slot])   # [L, Kmax, N]
         sess.status, sess.slot = SessionStatus.RETIRED, None
         self.retired.append(self.grid.retire(slot))
 

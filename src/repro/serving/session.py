@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Any, List, Optional, Tuple
+from typing import Any, List, Optional
 
 import jax
 import numpy as np
@@ -53,9 +53,10 @@ class StreamSession:
     predictions: List[WindowPrediction] = dataclasses.field(default_factory=list)
     # buffered events that arrived but have not been stepped yet
     _pending: List[np.ndarray] = dataclasses.field(default_factory=list)
-    # per-stream snapshot of deltas/state captured at retire (for inspection
-    # or for promoting a stream's adaptation into the shared base)
-    final_deltas: Optional[Tuple[np.ndarray, ...]] = None
+    # per-stream snapshot of deltas captured at retire (for inspection or
+    # for promoting a stream's adaptation into the shared base); stacked
+    # [n_layers, Kmax, n_hidden]
+    final_deltas: Optional[np.ndarray] = None
 
     # -- event buffering -----------------------------------------------------
     def push_events(self, chunk: np.ndarray) -> None:

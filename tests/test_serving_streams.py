@@ -66,18 +66,18 @@ def test_interleaved_matches_solo(params):
                          others=[(2, ev_b)])    # lane 1 stays idle
 
     for l in range(CFG.n_layers):
-        np.testing.assert_allclose(st2.layers[l].tr[0], st_a.layers[l].tr[0],
+        np.testing.assert_allclose(st2.layers.tr[0, l], st_a.layers.tr[0, l],
                                    atol=1e-5)
-        np.testing.assert_allclose(st2.layers[l].tr_cc[0],
-                                   st_a.layers[l].tr_cc[0], atol=1e-5)
-        np.testing.assert_allclose(st2.layers[l].tr[2], st_b.layers[l].tr[0],
+        np.testing.assert_allclose(st2.layers.tr_cc[0, l],
+                                   st_a.layers.tr_cc[0, l], atol=1e-5)
+        np.testing.assert_allclose(st2.layers.tr[2, l], st_b.layers.tr[0, l],
                                    atol=1e-5)
-        np.testing.assert_allclose(dl2[l][0], dl_a[l][0], atol=1e-5)
-        np.testing.assert_allclose(dl2[l][2], dl_b[l][0], atol=1e-5)
+        np.testing.assert_allclose(dl2[0, l], dl_a[0, l], atol=1e-5)
+        np.testing.assert_allclose(dl2[2, l], dl_b[0, l], atol=1e-5)
     np.testing.assert_allclose(st2.ss_mean[0], st_a.ss_mean[0], atol=1e-6)
     np.testing.assert_allclose(st2.ss_mean[2], st_b.ss_mean[0], atol=1e-6)
     # the idle lane never moved
-    assert float(jnp.abs(st2.layers[0].tr[1]).max()) == 0.0
+    assert float(jnp.abs(st2.layers.tr[1]).max()) == 0.0
     assert float(delta_norms(dl2)[1]) == 0.0
 
 
@@ -87,9 +87,9 @@ def test_chunk_boundaries_do_not_matter(params):
     st1, dl1 = _run_lane(params, ev, n_slots=1, lane=0, chunk_len=6)
     st2, dl2 = _run_lane(params, ev, n_slots=1, lane=0, chunk_len=11)
     for l in range(CFG.n_layers):
-        np.testing.assert_allclose(st1.layers[l].tr[0], st2.layers[l].tr[0],
+        np.testing.assert_allclose(st1.layers.tr[0, l], st2.layers.tr[0, l],
                                    atol=1e-5)
-        np.testing.assert_allclose(dl1[l][0], dl2[l][0], atol=1e-5)
+        np.testing.assert_allclose(dl1[0, l], dl2[0, l], atol=1e-5)
     assert int(st1.sample_idx[0]) == int(st2.sample_idx[0]) == 37 // CFG.t_steps
 
 

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import engine
 from repro.core.dsst import DSSTConfig
 from repro.core.gating import GatingConfig, skip_rate
 from repro.core.snn import (SNNConfig, accuracy, init_params, init_state,
@@ -63,11 +64,11 @@ def test_masks_stay_nm_through_training():
         params, state, m = step(params, state, jnp.asarray(ev), jnp.asarray(lab))
     for l, fan_in in enumerate(cfg.layer_fanins):
         spec = cfg.spec(fan_in)
-        assert bool(sp.check_unit_mask(params["hidden"][l]["mask"], spec))
+        w, mask = engine.hidden_slice(params, l, cfg)
+        assert bool(sp.check_unit_mask(mask, spec))
         # weights outside the mask must be exactly zero
-        dense = sp.expand_unit_mask(params["hidden"][l]["mask"], spec,
-                                    fan_in, cfg.n_hidden)
-        off = jnp.where(dense, 0.0, params["hidden"][l]["w"])
+        dense = sp.expand_unit_mask(mask, spec, fan_in, cfg.n_hidden)
+        off = jnp.where(dense, 0.0, w)
         assert float(jnp.abs(off).max()) == 0.0
     assert not bool(jnp.isnan(m.logits).any())
 

@@ -31,8 +31,10 @@ def test_elfcore_system_end_to_end():
         ev, lab = task.sample(rng, 16)
         params, state, m = step(params, state, jnp.asarray(ev), jnp.asarray(lab))
     # masks exact N:M after multiple DSST events
+    from repro.core import engine
     for l, fan_in in enumerate(cfg.layer_fanins):
-        assert bool(sp.check_unit_mask(params["hidden"][l]["mask"], cfg.spec(fan_in)))
+        _, mask = engine.hidden_slice(params, l, cfg)
+        assert bool(sp.check_unit_mask(mask, cfg.spec(fan_in)))
     # gate engine skipped something on a repeating stream
     assert float(m.gate_open_frac) < 1.0
     # readout above chance on held-out data
