@@ -6,8 +6,21 @@ the chip's 0.6 V operating point. Hard guarantee checked here: after the
 first compilation, multiplexing any number of streams through the fixed
 slot grid triggers **zero recompilation** (jit cache size stays 1) — the
 serving analogue of the continuous batcher's static-shape discipline.
+
+``--devices N`` sweeps the sharded slot grid: the same workload is driven
+with the slot axis sharded over 1, 2, ..., N host devices (each count in a
+fresh subprocess, since XLA pins the device count at init) and events/s
+scaling vs the 1-device baseline is reported. On a CPU host the "devices"
+share physical cores, so this validates the sharded path's overhead and
+mechanics rather than demonstrating real speedup — on a multi-chip host
+the same sweep reports true slot-throughput scaling.
 """
 from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
 
 import jax
 import numpy as np
@@ -21,12 +34,14 @@ N_IN, N_HIDDEN, T_STEPS = 64, 64, 20
 CHUNK_LEN = 10
 
 
-def _drive(n_streams: int, n_slots: int, n_windows: int, seed: int = 0):
+def _drive(n_streams: int, n_slots: int, n_windows: int, seed: int = 0,
+           mesh=None):
     cfg = SNNConfig(n_in=N_IN, n_hidden=N_HIDDEN, n_layers=2, n_out=10,
                     t_steps=T_STEPS)
     params = init_params(jax.random.PRNGKey(seed), cfg)
     task = make_task("gesture", n_in=N_IN, t_steps=T_STEPS, seed=seed)
-    sched = StreamScheduler(params, cfg, n_slots=n_slots, chunk_len=CHUNK_LEN)
+    sched = StreamScheduler(params, cfg, n_slots=n_slots, chunk_len=CHUNK_LEN,
+                            mesh=mesh)
     arrival = ArrivalConfig(min_chunk=4, max_chunk=CHUNK_LEN, mean_gap_s=1e-4)
     for sid in range(n_streams):
         sched.submit(StreamSession(
@@ -68,6 +83,75 @@ def run(quick: bool = True):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# --devices N: slot-throughput scaling of the sharded grid
+# ---------------------------------------------------------------------------
+
+SWEEP_STREAMS, SWEEP_SLOTS, SWEEP_WINDOWS = 64, 64, 2
+
+
+def _child_one_device_count(n_devices: int) -> None:
+    """Runs inside a subprocess whose XLA_FLAGS pinned ``n_devices``."""
+    from repro.launch.mesh import make_serving_mesh
+    mesh = make_serving_mesh(n_devices) if n_devices > 1 else None
+    sched = _drive(SWEEP_STREAMS, SWEEP_SLOTS, SWEEP_WINDOWS, mesh=mesh)
+    r = sched.telemetry.rollup()
+    print(json.dumps({
+        "devices": n_devices, "n_slots": sched.n_slots,
+        "events_per_s": r["events_per_s"],
+        "timesteps_per_s": r["timesteps_per_s"],
+        "p50_ms": r["p50_ms"], "p99_ms": r["p99_ms"],
+        "compiles": sched.n_compiles,
+    }))
+
+
+def run_devices_sweep(max_devices: int):
+    """Spawn one subprocess per device count (1, 2, 4, ..., max_devices)
+    and report events/s scaling of the sharded slot grid."""
+    counts, d = [], 1
+    while d < max_devices:
+        counts.append(d)
+        d *= 2
+    counts.append(max_devices)
+    rows, base = [], None
+    for n in counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_serving_streams",
+             "--_child", str(n)],
+            capture_output=True, text=True, env=env, timeout=1200)
+        if out.returncode != 0:
+            raise RuntimeError(f"devices={n} child failed:\n{out.stderr}")
+        rec = json.loads(out.stdout.strip().splitlines()[-1])
+        if base is None:
+            base = rec["events_per_s"]
+        rows.append({
+            "name": f"serving/devices{n}_slots{rec['n_slots']}",
+            "us_per_call": rec["p50_ms"] * 1e3,
+            "derived": (f"events/s={rec['events_per_s']:.0f}"
+                        f" scale_x={rec['events_per_s'] / base:.2f}"
+                        f" ts/s={rec['timesteps_per_s']:.0f}"
+                        f" p99_ms={rec['p99_ms']:.2f}"
+                        f" compiles={rec['compiles']}"),
+        })
+    return rows
+
+
 if __name__ == "__main__":
-    for row in run(quick=True):
-        print(row)
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=0,
+                    help="sweep the sharded slot grid over 1..N host devices")
+    ap.add_argument("--_child", type=int, default=0, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args._child:
+        _child_one_device_count(args._child)
+    elif args.devices:
+        print("name,us_per_call,derived")
+        for row in run_devices_sweep(args.devices):
+            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+    else:
+        for row in run(quick=True):
+            print(row)

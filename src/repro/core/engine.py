@@ -515,4 +515,21 @@ def scan_chunk(wrep, masks_f, readout, deltas, layers: LayerState, x_tr,
 
     carry0 = (layers, x_tr, ss_mean, t_win, samp, deltas)
     carry, outs = jax.lax.scan(ts, carry0, {"x": events, "v": valid})
+    _assert_slot_separable(carry, outs, events.shape[0], events.shape[1], cfg)
     return carry, outs
+
+
+def _assert_slot_separable(carry, outs, C: int, S: int, cfg) -> None:
+    """The chunk step's zero-collective contract: every per-stream quantity
+    keeps its slot axis through the scan. A reduction over slots — which
+    would silently break the slot-axis ``shard_map`` in serving/adapt.py —
+    shows up at trace time as a dropped ``S`` dimension here."""
+    layers, x_tr, ss_mean, t_w, samp, dls = carry
+    for leaf in jax.tree_util.tree_leaves(layers):
+        assert leaf.shape[:2] == (cfg.n_layers, S), leaf.shape
+    assert x_tr.shape[0] == S, x_tr.shape
+    assert ss_mean.shape == (cfg.n_layers, S), ss_mean.shape
+    assert t_w.shape == (S,) and samp.shape == (S,), (t_w.shape, samp.shape)
+    assert dls.shape[:2] == (cfg.n_layers, S), dls.shape
+    for name, leaf in outs.items():
+        assert leaf.shape[:2] == (C, S), (name, leaf.shape)

@@ -367,6 +367,16 @@ def run_chunk(
         local_loss=outs["loss"].sum(0),
         steps=outs["steps"].sum(0),
     )
+    # slot-separability contract (backs the slot-axis shard_map in serving):
+    # metric reductions run over time only — the S axis survives everywhere
+    S = events.shape[1]
+    assert metrics.logits.shape[1] == S, metrics.logits.shape
+    assert metrics.window_end.shape == events.shape[:2], metrics.window_end.shape
+    for leaf in (metrics.sop_forward, metrics.sop_wu, metrics.sop_wu_offered,
+                 metrics.local_loss, metrics.steps):
+        assert leaf.shape == (S,), leaf.shape
+    assert metrics.gate_opened.shape == metrics.gate_offered.shape \
+        == (S, cfg.n_layers), metrics.gate_opened.shape
     return _to_engine(dls), new_state, metrics
 
 

@@ -148,6 +148,16 @@ class ContinuousBatcher:
                 toks[i] = req.prompt[-1]
         return toks
 
+    def _maybe_retire(self, slot: int, req: Request) -> None:
+        """Done/EOS check after every emitted token — including the first
+        one emitted by the prefill-completion branch (a ``max_new=1``
+        request must emit exactly 1 token, and an EOS first token must
+        retire immediately, not decode one extra step)."""
+        if (len(req.out) >= req.max_new
+                or (self.eos_id is not None and req.out[-1] == self.eos_id)):
+            req.done = True
+            self.finished.append(self.grid.retire(slot))
+
     def step(self, rng: Optional[jax.Array] = None):
         """One global decode step across all slots."""
         self._admit()
@@ -164,13 +174,11 @@ class ContinuousBatcher:
                 if req._fed == len(req.prompt):
                     req.out.append(int(nxt[i]))   # first generated token
                     self.stats["tokens_out"] += 1
+                    self._maybe_retire(i, req)
                 continue
             req.out.append(int(nxt[i]))
             self.stats["tokens_out"] += 1
-            if (len(req.out) >= req.max_new
-                    or (self.eos_id is not None and req.out[-1] == self.eos_id)):
-                req.done = True
-                self.finished.append(self.grid.retire(i))
+            self._maybe_retire(i, req)
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
         while not self.grid.drained:

@@ -38,6 +38,23 @@ def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
         np.asarray(devs[: data * model]).reshape(data, model), ("data", "model"))
 
 
+def make_serving_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
+    """1-D ``("slots",)`` mesh for the sharded serving slot grid.
+
+    The event-stream chunk step is per-slot separable (no collectives), so
+    the only useful serving topology is a flat slot axis over every device
+    this host can see — the software analogue of replicating the on-chip
+    learning datapath across cores with strictly core-local state.
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if len(devs) < n:
+        raise RuntimeError(
+            f"serving mesh needs {n} devices, found {len(devs)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("slots",))
+
+
 def dp_axes(mesh: jax.sharding.Mesh):
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

@@ -216,3 +216,80 @@ def logits_sharding(mesh: Mesh, global_batch: int, cfg: ModelConfig,
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# serving slot grid (slot-axis rules; consumed by serving/adapt.make_chunk_fn)
+# ---------------------------------------------------------------------------
+#
+# The SNN serving chunk step is per-slot separable — every per-stream
+# quantity is a single slot-leading array (``StreamState`` leaves, the
+# ``[S, L, K, N]`` delta tensor, the ``[S]`` adapt mask) or carries the slot
+# axis second (the ``[C, S, n_in]`` event and ``[C, S]`` valid staging
+# buffers). Sharding is therefore one rule applied twice: "slots" on the
+# slot axis, everything else replicated. The frozen base params replicate —
+# they are read-only under serving and small next to the delta grid.
+
+SLOT_AXIS = "slots"
+
+
+def slot_devices(mesh: Mesh) -> int:
+    return mesh.shape[SLOT_AXIS]
+
+
+def round_up_slots(n_slots: int, mesh: Mesh) -> int:
+    """Smallest multiple of the mesh's slot-device count >= ``n_slots``."""
+    d = slot_devices(mesh)
+    return -(-n_slots // d) * d
+
+
+def check_slot_divisible(n_slots: int, mesh: Mesh) -> None:
+    d = slot_devices(mesh)
+    if n_slots % d != 0:
+        raise ValueError(
+            f"n_slots={n_slots} not divisible by the {d}-device slot mesh; "
+            f"use round_up_slots ({round_up_slots(n_slots, mesh)})")
+
+
+def slot_spec(slot_dim: int = 0) -> P:
+    """Partition the ``slot_dim``-th axis over "slots", rest replicated."""
+    return P(*((None,) * slot_dim), SLOT_AXIS)
+
+
+def slot_sharding(mesh: Mesh, slot_dim: int = 0) -> NamedSharding:
+    return NamedSharding(mesh, slot_spec(slot_dim))
+
+
+def stream_shardings(tree: Any, mesh: Mesh) -> Any:
+    """Slot-leading NamedShardings for StreamState / delta pytrees (every
+    leaf has the slot axis first — the lane-surgery layout invariant)."""
+    return jax.tree_util.tree_map(lambda _: slot_sharding(mesh), tree)
+
+
+def chunk_step_specs() -> Tuple[Tuple, Tuple]:
+    """shard_map specs for ``fn(params, deltas, state, events, valid,
+    adapt_mask) -> (deltas, state, metrics)``.
+
+    Pytree-prefix form: ``P()`` replicates the whole params tree, one
+    slot-leading spec covers every StreamState leaf; ``ChunkMetrics`` needs
+    per-field specs because ``logits``/``window_end`` carry the slot axis
+    second. Zero collectives inside the step — each device advances only
+    its slot shard.
+    """
+    from repro.core.snn import ChunkMetrics
+    s0, s1 = slot_spec(0), slot_spec(1)
+    metrics = ChunkMetrics(
+        logits=s1, window_end=s1, sop_forward=s0, sop_wu=s0,
+        sop_wu_offered=s0, gate_opened=s0, gate_offered=s0,
+        local_loss=s0, steps=s0)
+    in_specs = (P(), s0, s0, s1, s1, s0)
+    out_specs = (s0, s0, metrics)
+    return in_specs, out_specs
+
+
+def chunk_step_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
+    """The same specs as NamedShardings (jit in/out placement)."""
+    in_specs, out_specs = chunk_step_specs()
+    as_sh = lambda tree: jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p), tree)
+    return as_sh(in_specs), as_sh(out_specs)

@@ -16,15 +16,24 @@ This module owns everything *around* the jitted step:
 * per-stream adapt on/off (``adapt_mask``) applied by freezing a lane's
   delta across the step — exactly equivalent to gating the update off,
   while trace/threshold state keeps tracking the stream;
-* delta hygiene: multiplicative decay toward the base and a hard clip, so
-  hours-long streams cannot diverge;
+* delta hygiene: multiplicative decay toward the base and a hard clip,
+  applied only to lanes that actually processed valid timesteps this chunk
+  (an idle slot keeps its delta bit-identical — the scheduler's "empty slot
+  costs exactly zero" invariant), so hours-long streams cannot diverge;
+* slot-axis sharding: pass a ``("slots",)`` mesh
+  (``launch.mesh.make_serving_mesh``) and the chunk step runs under
+  ``shard_map`` with slot-leading ``NamedSharding`` on every per-stream
+  tensor — each device advances only its slot shard, with zero
+  cross-device collectives (the step is per-slot separable by
+  construction; asserted in ``core/engine.scan_chunk``);
 * ``merge_lane_into_base`` — promote one stream's adaptation into the
   shared base (fleet learning; the hook for DSST-under-traffic later).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+import functools
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,23 +50,30 @@ class AdaptConfig:
     lr_scale: float = 1.0        # scales cfg.lr for the serving path
 
 
-def make_chunk_fn(cfg: SNNConfig, adapt: AdaptConfig | None = None):
+def make_chunk_fn(cfg: SNNConfig, adapt: AdaptConfig | None = None,
+                  mesh: Optional[jax.sharding.Mesh] = None):
     """Build the jitted slot-grid step.
 
     Returns ``fn(params, deltas, state, events, valid, adapt_mask)`` ->
     ``(deltas, state, metrics)`` with static shapes: ``events`` [C, S, n_in],
     ``valid`` [C, S] bool, ``adapt_mask`` [S] bool. One compilation serves
     any number of streams multiplexed through the S slots.
+
+    With ``mesh`` (a 1-D ``("slots",)`` mesh), the step runs under
+    ``shard_map`` with explicit slot-leading in/out shardings: ``deltas``,
+    every ``StreamState`` leaf and ``adapt_mask`` shard their slot axis,
+    the ``[C, S, ...]`` event/valid buffers shard axis 1, params replicate.
+    Each device advances only its slot shard — no collectives — so the
+    result is bit-identical to the single-device path. S must divide by the
+    mesh's device count (``launch.sharding.check_slot_divisible``).
     """
     adapt = adapt or AdaptConfig()
     scfg = cfg if adapt.lr_scale == 1.0 else dataclasses.replace(
         cfg, lr=cfg.lr * adapt.lr_scale)
     traces = {"n": 0}   # bumps once per (re)trace — public-API compile count
 
-    @jax.jit
-    def chunk_fn(params, deltas, state: StreamState, events, valid, adapt_mask
-                 ) -> Tuple[jax.Array, StreamState, ChunkMetrics]:
-        traces["n"] += 1
+    def step(params, deltas, state: StreamState, events, valid, adapt_mask
+             ) -> Tuple[jax.Array, StreamState, ChunkMetrics]:
         new_deltas, new_state, metrics = run_chunk(
             params, deltas, state, events, valid, scfg, learn=adapt.enabled)
         d = new_deltas                           # [S, L, Kmax, N]
@@ -65,15 +81,40 @@ def make_chunk_fn(cfg: SNNConfig, adapt: AdaptConfig | None = None):
             d = d * adapt.delta_decay
         if adapt.delta_clip > 0.0:
             d = jnp.clip(d, -adapt.delta_clip, adapt.delta_clip)
-        # frozen lanes keep their old delta exactly (no decay/clip drift)
-        out = jnp.where(adapt_mask[:, None, None, None], d, deltas)
-        # a frozen lane must not be billed for weight updates either
+        # decay/clip only touch lanes that processed valid timesteps this
+        # chunk; frozen AND idle lanes keep their old delta bit-exactly
+        live = adapt_mask & valid.any(0)         # [S]
+        out = jnp.where(live[:, None, None, None], d, deltas)
+        # a frozen lane is not billed for weight updates — and is not
+        # *offered* any either, or its wu_skip_rate reads a fake 100%
         metrics = metrics._replace(
             sop_wu=metrics.sop_wu * adapt_mask,
-            gate_opened=metrics.gate_opened * adapt_mask[:, None])
+            sop_wu_offered=metrics.sop_wu_offered * adapt_mask,
+            gate_opened=metrics.gate_opened * adapt_mask[:, None],
+            gate_offered=metrics.gate_offered * adapt_mask[:, None])
         return out, new_state, metrics
 
+    if mesh is None:
+        body, jit_kw = step, {}
+        validate = lambda n_slots: None
+    else:
+        from jax.experimental.shard_map import shard_map
+        from repro.launch import sharding as SH
+        in_specs, out_specs = SH.chunk_step_specs()
+        body = shard_map(step, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+        in_sh, out_sh = SH.chunk_step_shardings(mesh)
+        jit_kw = {"in_shardings": in_sh, "out_shardings": out_sh}
+        validate = lambda n_slots: SH.check_slot_divisible(n_slots, mesh)
+
+    @functools.partial(jax.jit, **jit_kw)
+    def chunk_fn(params, deltas, state, events, valid, adapt_mask):
+        traces["n"] += 1
+        validate(events.shape[1])   # trace-time: clean error, not XLA's
+        return body(params, deltas, state, events, valid, adapt_mask)
+
     chunk_fn.n_traces = lambda: traces["n"]
+    chunk_fn.mesh = mesh
     return chunk_fn
 
 

@@ -19,6 +19,12 @@ Per step:
    the benchmark);
 4. route window-end logits back to sessions as predictions, fold per-lane
    metrics into per-stream telemetry, retire exhausted streams.
+
+With a ``("slots",)`` mesh (``launch.mesh.make_serving_mesh``) the grid
+shards over devices: slot allocation pads to the device count, the chunk
+step runs under slot-axis ``shard_map`` (bit-identical to 1-device — see
+serving/adapt.py), and lane surgery re-places its result so the slot
+sharding survives admit/retire.
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ import jax
 import numpy as np
 
 from repro.core.snn import SNNConfig, init_stream_deltas, init_stream_state
+from repro.launch import sharding
 from repro.launch.batching import SlotGrid
 
 from .adapt import AdaptConfig, make_chunk_fn
@@ -41,28 +48,60 @@ class StreamScheduler:
     def __init__(self, params, cfg: SNNConfig, n_slots: int,
                  chunk_len: int = 8, adapt: Optional[AdaptConfig] = None,
                  clock_dt_s: float = 0.002,
-                 telemetry: Optional[FleetTelemetry] = None):
+                 telemetry: Optional[FleetTelemetry] = None,
+                 mesh=None):
         self.params, self.cfg = params, cfg
+        self.mesh = mesh
+        if mesh is not None:
+            # device-count-aware slot allocation: the grid is padded to a
+            # multiple of the slot-mesh size so every device owns an equal
+            # slot shard (padding lanes just idle — an empty slot is free),
+            # and to >= 2 slots per device: at a local batch of 1 XLA:CPU
+            # drops the slot matmuls to a gemv with a different K-reduction
+            # order, costing bit-identity with the single-device path
+            n_slots = max(sharding.round_up_slots(n_slots, mesh),
+                          2 * sharding.slot_devices(mesh))
         self.n_slots, self.chunk_len = n_slots, chunk_len
         self.clock = 0.0
         self.clock_dt_s = clock_dt_s
         self.grid: SlotGrid[StreamSession] = SlotGrid(n_slots)
         self.state = init_stream_state(cfg, n_slots)
         self.deltas = init_stream_deltas(cfg, n_slots)
-        self.chunk_fn = make_chunk_fn(cfg, adapt)
+        if mesh is not None:
+            self._state_sh = sharding.stream_shardings(self.state, mesh)
+            self._delta_sh = sharding.slot_sharding(mesh)
+            self.state = jax.device_put(self.state, self._state_sh)
+            self.deltas = jax.device_put(self.deltas, self._delta_sh)
+        self.chunk_fn = make_chunk_fn(cfg, adapt, mesh=mesh)
         self.telemetry = telemetry or FleetTelemetry()
         self.retired: List[StreamSession] = []
 
     # -- lifecycle -----------------------------------------------------------
     def submit(self, session: StreamSession) -> None:
         session.status = SessionStatus.QUEUED
+        if session.n_in is None:
+            session.n_in = self.cfg.n_in
+        elif session.n_in != self.cfg.n_in:
+            # fail here, not mid-step with a half-mutated grid
+            raise ValueError(
+                f"session {session.sid} n_in={session.n_in} != "
+                f"cfg.n_in={self.cfg.n_in}")
         self.grid.submit(session)
+
+    def _replace_lanes(self, state, deltas):
+        """Install post-surgery state/deltas, restoring the slot sharding —
+        eager ``.at[slot].set`` lane writes are single-lane-correct on
+        sharded arrays but may leave the result unplaced."""
+        if self.mesh is not None:
+            state = jax.device_put(state, self._state_sh)
+            deltas = jax.device_put(deltas, self._delta_sh)
+        self.state, self.deltas = state, deltas
 
     def _admit(self) -> None:
         def on_admit(slot: int, sess: StreamSession):
             sess.slot, sess.status = slot, SessionStatus.ACTIVE
-            self.state, self.deltas = reset_lane(
-                self.state, self.deltas, self.cfg, slot)
+            self._replace_lanes(*reset_lane(
+                self.state, self.deltas, self.cfg, slot))
         self.grid.admit(on_admit)
 
     def _poll_sources(self) -> None:

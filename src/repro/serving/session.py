@@ -47,6 +47,9 @@ class StreamSession:
     sid: int
     source: Any = None                      # StreamSource (stream_source.py)
     adapt: bool = True                      # OSSL adaptation on for this stream
+    n_in: Optional[int] = None              # event width; learned on first
+    #   push, or stamped by the scheduler at submit — keeps pop_chunk's
+    #   empty result a well-shaped [0, n_in] (not a [0, 0] broadcast trap)
     status: SessionStatus = SessionStatus.QUEUED
     slot: Optional[int] = None
     timesteps_fed: int = 0
@@ -63,6 +66,11 @@ class StreamSession:
         """chunk: [c, n_in] binary spikes, any c >= 1."""
         if chunk.ndim != 2:
             raise ValueError(f"chunk must be [c, n_in], got {chunk.shape}")
+        if self.n_in is None:
+            self.n_in = int(chunk.shape[1])
+        elif chunk.shape[1] != self.n_in:
+            raise ValueError(
+                f"chunk width {chunk.shape[1]} != session n_in {self.n_in}")
         self._pending.append(np.asarray(chunk, np.float32))
 
     def pending_timesteps(self) -> int:
@@ -81,7 +89,7 @@ class StreamSession:
                 self._pending[0] = head[need:]
                 need = 0
         if not out:
-            return np.zeros((0, 0), np.float32)
+            return np.zeros((0, self.n_in or 0), np.float32)
         return np.concatenate(out, axis=0)
 
     @property

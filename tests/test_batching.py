@@ -46,6 +46,39 @@ def test_concurrent_requests_isolated(setup):
     np.testing.assert_array_equal(np.asarray(done[2].out), w2)
 
 
+def test_max_new_1_emits_exactly_one_token(setup):
+    """Regression: the prefill-completion branch appended the first
+    generated token and ``continue``d past the done check, so a
+    ``max_new=1`` request decoded one extra step and emitted 2 tokens."""
+    cfg, params = setup
+    prompt = jax.random.randint(jax.random.PRNGKey(4), (1, 6), 0, cfg.vocab)
+    want = np.asarray(generate(params, cfg, prompt, n_new=1))[0, 6:]
+
+    b = ContinuousBatcher(params, cfg, n_slots=2, max_seq=32)
+    b.submit(Request(rid=0, prompt=prompt[0].tolist(), max_new=1))
+    done = b.run_until_drained()
+    assert len(done) == 1 and done[0].done
+    assert len(done[0].out) == 1, done[0].out
+    np.testing.assert_array_equal(np.asarray(done[0].out), want)
+    assert b.stats["tokens_out"] == 1
+    assert b.grid.drained
+
+
+def test_eos_as_first_generated_token_retires_immediately(setup):
+    """Regression: an EOS emitted by the prefill-completion branch was
+    ignored for an extra decode step. Pick eos_id = the token the model
+    actually generates first, then assert the request stops at 1 token."""
+    cfg, params = setup
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (1, 5), 0, cfg.vocab)
+    first = int(np.asarray(generate(params, cfg, prompt, n_new=1))[0, 5])
+
+    b = ContinuousBatcher(params, cfg, n_slots=2, max_seq=32, eos_id=first)
+    b.submit(Request(rid=0, prompt=prompt[0].tolist(), max_new=8))
+    done = b.run_until_drained()
+    assert len(done) == 1 and done[0].done
+    assert done[0].out == [first], done[0].out
+
+
 def test_slot_reuse_more_requests_than_slots(setup):
     cfg, params = setup
     rng = np.random.default_rng(0)

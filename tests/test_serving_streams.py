@@ -14,9 +14,9 @@ from repro.core.snn import (SNNConfig, init_params, init_stream_deltas,
                             init_stream_state, run_chunk)
 from repro.data.events import make_task
 from repro.launch.batching import SlotGrid
-from repro.serving import (ReplaySource, SessionStatus, StreamScheduler,
-                           StreamSession, TaskStreamSource, delta_norms,
-                           read_lane, write_lane)
+from repro.serving import (AdaptConfig, ReplaySource, SessionStatus,
+                           StreamScheduler, StreamSession, TaskStreamSource,
+                           delta_norms, make_chunk_fn, read_lane, write_lane)
 
 CFG = SNNConfig(n_in=32, n_hidden=32, n_layers=2, n_out=8, t_steps=16)
 
@@ -195,6 +195,53 @@ def test_active_stream_adapts_and_frozen_does_not(params):
     assert len(done[0].predictions) == len(done[1].predictions) == 3
 
 
+def test_idle_lane_delta_untouched_by_decay(params):
+    """Regression: delta decay/clip used to run on every adaptive lane every
+    grid step, idle or not — an empty slot slowly bled its delta toward 0.
+    Hygiene must only touch lanes with valid timesteps this chunk."""
+    fn = make_chunk_fn(CFG, AdaptConfig(delta_decay=0.9, delta_clip=0.05))
+    st = init_stream_state(CFG, 2)
+    # both lanes carry accumulated adaptation
+    dl = jnp.full_like(init_stream_deltas(CFG, 2), 0.04)
+    before = np.asarray(dl).copy()
+    ev = jnp.asarray(_events(11, 5, rate=0.4))[:, None, :].repeat(2, 1)
+    valid = np.zeros((5, 2), bool)
+    valid[:, 0] = True    # lane 1 idle in every chunk
+    amask = np.ones(2, bool)
+    for _ in range(4):
+        dl, st, _ = fn(params, dl, st, ev, jnp.asarray(valid), amask)
+    np.testing.assert_array_equal(np.asarray(dl[1]), before[1])
+    # the active lane's hygiene still ran: decay bled its parked delta
+    assert float(np.abs(np.asarray(dl[0])).max()) < 0.04
+    assert not np.array_equal(np.asarray(dl[0]), before[0])
+
+
+def test_frozen_lane_offered_counters_masked(params):
+    """Regression: sop_wu/gate_opened were zeroed for adapt=False lanes but
+    the *offered* counters were not, so a frozen stream reported a fake
+    100% wu_skip_rate. Frozen lanes must offer nothing too."""
+    fn = make_chunk_fn(CFG)
+    st = init_stream_state(CFG, 2)
+    dl = init_stream_deltas(CFG, 2)
+    ev = jnp.asarray(_events(12, CFG.t_steps, rate=0.4))[:, None, :].repeat(2, 1)
+    valid = jnp.ones((CFG.t_steps, 2), bool)
+    amask = np.array([True, False])
+    dl, st, m = fn(params, dl, st, ev, valid, amask)
+    assert float(m.sop_wu_offered[0]) > 0
+    assert float(m.sop_wu_offered[1]) == 0.0
+    assert float(m.gate_offered[1].sum()) == 0.0
+    # scheduler-level: a frozen stream's skip rate reads 0 (nothing offered),
+    # not 100% (everything "skipped")
+    sched = StreamScheduler(params, CFG, n_slots=1, chunk_len=8)
+    sched.submit(StreamSession(
+        sid=0, source=ReplaySource(_events(13, 2 * CFG.t_steps, 0.4)),
+        adapt=False))
+    sched.run_until_drained()
+    c = sched.telemetry.stream(0)
+    assert c.sop_wu_offered == 0.0 and c.wu_skip_rate == 0.0
+    assert c.timesteps == 2 * CFG.t_steps    # the stream was still served
+
+
 def test_gate_skips_repetitive_stream(params):
     """SS gate: after per-stream threshold calibration, a stream repeating
     the same window pattern skips far more WUs than a varied one."""
@@ -256,6 +303,34 @@ def test_zero_recompilation_across_traffic_patterns(params):
 
 
 # ------------------------------------------------------------- lane surgery
+
+def test_pop_chunk_empty_is_column_shaped():
+    """Regression: an empty pop returned shape (0, 0), a broadcast footgun
+    for callers that concatenate or index columns. Width comes from the
+    first pushed chunk, or from ``n_in`` stamped at construction/submit."""
+    sess = StreamSession(sid=0, n_in=CFG.n_in)
+    assert sess.pop_chunk(4).shape == (0, CFG.n_in)
+    sess2 = StreamSession(sid=1)
+    sess2.push_events(np.zeros((3, CFG.n_in), np.float32))
+    assert sess2.pop_chunk(8).shape == (3, CFG.n_in)
+    assert sess2.pop_chunk(8).shape == (0, CFG.n_in)     # drained: width kept
+    with pytest.raises(ValueError, match="width"):
+        sess2.push_events(np.zeros((2, CFG.n_in + 1), np.float32))
+    # the scheduler stamps n_in at submit, so even a never-pushed session
+    # pops well-shaped empties
+    params = init_params(jax.random.PRNGKey(1), CFG)
+    sched = StreamScheduler(params, CFG, n_slots=1)
+    fresh = StreamSession(sid=2)
+    sched.submit(fresh)
+    assert fresh.n_in == CFG.n_in
+    assert fresh.pop_chunk(4).shape == (0, CFG.n_in)
+    # a session whose learned width disagrees with the grid fails at submit,
+    # not mid-step with a half-mutated grid
+    wrong = StreamSession(sid=3)
+    wrong.push_events(np.zeros((2, CFG.n_in + 1), np.float32))
+    with pytest.raises(ValueError, match="n_in"):
+        sched.submit(wrong)
+
 
 def test_write_read_lane_roundtrip():
     st = init_stream_state(CFG, 3)
