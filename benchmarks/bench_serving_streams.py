@@ -14,6 +14,14 @@ scaling vs the 1-device baseline is reported. On a CPU host the "devices"
 share physical cores, so this validates the sharded path's overhead and
 mechanics rather than demonstrating real speedup — on a multi-chip host
 the same sweep reports true slot-throughput scaling.
+
+``--evolve EVERY`` drives the same workload with and without the live
+topology service (DSST prune/regrow epochs every EVERY grid steps, hot
+streams folded into the base) and reports events/s for both plus epoch
+count and mask-change fraction — the cost of evolving connectivity under
+traffic. The hard guarantee extends: topology swaps included, the grid
+step still compiles exactly once. A quick with/without pair also runs as
+part of the default ``run()`` so the harness tracks it.
 """
 from __future__ import annotations
 
@@ -28,20 +36,25 @@ import numpy as np
 from repro.core.snn import SNNConfig, init_params
 from repro.data.events import make_task
 from repro.serving import (ArrivalConfig, FleetTelemetry, StreamScheduler,
-                           StreamSession, TaskStreamSource)
+                           StreamSession, TaskStreamSource, TopologyService,
+                           TopologyServiceConfig)
 
 N_IN, N_HIDDEN, T_STEPS = 64, 64, 20
 CHUNK_LEN = 10
 
 
 def _drive(n_streams: int, n_slots: int, n_windows: int, seed: int = 0,
-           mesh=None):
+           mesh=None, evolve_every: int = 0, merge_top: int = 2):
     cfg = SNNConfig(n_in=N_IN, n_hidden=N_HIDDEN, n_layers=2, n_out=10,
                     t_steps=T_STEPS)
     params = init_params(jax.random.PRNGKey(seed), cfg)
     task = make_task("gesture", n_in=N_IN, t_steps=T_STEPS, seed=seed)
+    topo = None
+    if evolve_every:
+        topo = TopologyService(cfg, TopologyServiceConfig(
+            epoch_every=evolve_every, merge_top=merge_top))
     sched = StreamScheduler(params, cfg, n_slots=n_slots, chunk_len=CHUNK_LEN,
-                            mesh=mesh)
+                            mesh=mesh, topology=topo)
     arrival = ArrivalConfig(min_chunk=4, max_chunk=CHUNK_LEN, mean_gap_s=1e-4)
     for sid in range(n_streams):
         sched.submit(StreamSession(
@@ -52,6 +65,7 @@ def _drive(n_streams: int, n_slots: int, n_windows: int, seed: int = 0,
     compiles_after_warmup = sched.n_compiles
     # measured window excludes warmup on both sides of the rate: fresh
     # telemetry drops the warmup step's latency AND its counted events
+    # (topology epochs keep counting in the service itself)
     sched.telemetry = FleetTelemetry()
     done = sched.run_until_drained()
     assert len(done) == n_streams, (len(done), n_streams)
@@ -62,10 +76,13 @@ def _drive(n_streams: int, n_slots: int, n_windows: int, seed: int = 0,
 
 def run(quick: bool = True):
     rows = []
+    frozen_baseline = None
     cases = [(8, 8, 2), (32, 32, 2)] if quick else \
         [(8, 8, 4), (32, 32, 4), (64, 32, 4)]
     for n_streams, n_slots, n_windows in cases:
         sched = _drive(n_streams, n_slots, n_windows)
+        if (n_streams, n_slots, n_windows) == _evolve_case(quick):
+            frozen_baseline = sched      # reused by the evolve row below
         r = sched.telemetry.rollup()
         per = sched.telemetry.per_stream()
         mean_uw = float(np.mean([p["power_uW"] for p in per]))
@@ -80,7 +97,51 @@ def run(quick: bool = True):
                         f" stream_uW={mean_uw:.1f}"
                         f" compiles={sched.n_compiles}"),
         })
+    rows += run_evolve(quick=quick, frozen=frozen_baseline)
     return rows
+
+
+# ---------------------------------------------------------------------------
+# --evolve EVERY: live topology epochs vs a frozen-topology baseline
+# ---------------------------------------------------------------------------
+
+def _evolve_case(quick: bool):
+    return (8, 8, 2) if quick else (32, 32, 4)
+
+
+def run_evolve(quick: bool = True, every: int = 0, frozen=None):
+    """Same workload, frozen topology vs live DSST epochs every ``every``
+    grid steps; reports the throughput cost and the connectivity churn.
+    ``every=0`` picks a cadence the workload actually reaches (the quick
+    case drains in ~8 grid steps, the full case in ~13 — an ``every``
+    beyond that measures a frozen fleet twice). ``frozen`` reuses an
+    already-driven baseline scheduler for the same case instead of
+    re-driving it."""
+    if not every:
+        every = 4 if quick else 6
+    n_streams, n_slots, n_windows = _evolve_case(quick)
+    frozen = frozen or _drive(n_streams, n_slots, n_windows)
+    live = _drive(n_streams, n_slots, n_windows, evolve_every=every)
+    rf = frozen.telemetry.rollup()
+    rl = live.telemetry.rollup()
+    svc = live.topology
+    assert svc.epoch_idx > 0, \
+        f"every={every} exceeds the workload's grid steps: zero epochs ran"
+    mask_change = float(np.mean([e.mask_change for e in svc.events]))
+    slowdown = rl["events_per_s"] / rf["events_per_s"] \
+        if rf["events_per_s"] else 0.0
+    return [{
+        "name": f"serving/evolve{every}_streams{n_streams}",
+        "us_per_call": rl["p50_ms"] * 1e3,
+        "derived": (f"events/s={rl['events_per_s']:.0f}"
+                    f" frozen_events/s={rf['events_per_s']:.0f}"
+                    f" rel={slowdown:.2f}"
+                    f" epochs={svc.epoch_idx}"
+                    f" mask_change={mask_change:.4f}"
+                    f" pruned={sum(e.pruned for e in svc.events)}"
+                    f" merged={sum(len(e.merged_slots) for e in svc.events)}"
+                    f" compiles={live.n_compiles}"),
+    }]
 
 
 # ---------------------------------------------------------------------------
@@ -144,6 +205,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=0,
                     help="sweep the sharded slot grid over 1..N host devices")
+    ap.add_argument("--evolve", type=int, default=0, metavar="EVERY",
+                    help="live topology epochs every EVERY grid steps, "
+                         "vs a frozen-topology baseline")
     ap.add_argument("--_child", type=int, default=0, help=argparse.SUPPRESS)
     args = ap.parse_args()
     if args._child:
@@ -151,6 +215,10 @@ if __name__ == "__main__":
     elif args.devices:
         print("name,us_per_call,derived")
         for row in run_devices_sweep(args.devices):
+            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+    elif args.evolve:
+        print("name,us_per_call,derived")
+        for row in run_evolve(quick=False, every=args.evolve):
             print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
     else:
         for row in run(quick=True):

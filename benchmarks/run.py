@@ -9,7 +9,9 @@
   fig6  — input-stationary sparse forward path
   fig7  — five tasks: accuracy + modeled µW vs paper numbers, + depth sweep
   table1— memory cut / NCE / headline ratios
-  serving — concurrent event-stream serving: throughput/latency/energy
+  serving — concurrent event-stream serving: throughput/latency/energy,
+            incl. live-topology-evolution vs frozen baseline (the module's
+            --evolve CLI runs the focused sweep)
   backend — engine backend seam: ref vs pallas-interpret step + parity
   roofline — per-(arch×shape×mesh) terms from dry-run artifacts (if present)
 

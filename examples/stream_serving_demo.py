@@ -4,7 +4,10 @@ Eight gesture streams arrive asynchronously (Poisson chunk arrivals) and
 are multiplexed onto a 4-slot grid: one jitted chunk step advances every
 active stream, the activity-dependent gate decides per stream when its
 OSSL delta absorbs an update, and telemetry prices each stream at the
-chip's 0.6 V operating point.
+chip's 0.6 V operating point.  A ``TopologyService`` keeps DSST alive
+under this traffic: every 10 grid steps the hottest stream's adaptation is
+folded into the shared base and a prune/regrow epoch evolves the N:M
+topology — with zero recompilation of the chunk step.
 
     PYTHONPATH=src python examples/stream_serving_demo.py
 """
@@ -13,7 +16,8 @@ import jax
 from repro.core.snn import SNNConfig, init_params
 from repro.data.events import make_task
 from repro.serving import (AdaptConfig, ArrivalConfig, StreamScheduler,
-                           StreamSession, TaskStreamSource, delta_norms)
+                           StreamSession, TaskStreamSource, TopologyService,
+                           TopologyServiceConfig, delta_norms)
 
 
 def main():
@@ -21,8 +25,11 @@ def main():
     params = init_params(jax.random.PRNGKey(0), cfg)
     task = make_task("gesture", n_in=cfg.n_in, t_steps=cfg.t_steps)
 
+    topo = TopologyService(cfg, TopologyServiceConfig(epoch_every=10,
+                                                      merge_top=1))
     sched = StreamScheduler(params, cfg, n_slots=4, chunk_len=8,
-                            adapt=AdaptConfig(delta_clip=0.5))
+                            adapt=AdaptConfig(delta_clip=0.5),
+                            topology=topo)
     arrival = ArrivalConfig(min_chunk=4, max_chunk=10, mean_gap_s=0.003)
     for sid in range(8):
         sched.submit(StreamSession(
@@ -52,6 +59,10 @@ def main():
           f"p50 {r['p50_ms']:.1f} ms / p99 {r['p99_ms']:.1f} ms per grid "
           f"step | WU skip {r['wu_skip_rate']:.2f} | modeled "
           f"{r['fleet_energy']['power_uW']:.1f} uW")
+    print(f"topology: {r['topology_epochs']} live epochs | "
+          f"{r['topology_pruned']} pruned / {r['topology_regrown']} regrown "
+          f"| mask change {r['topology_mask_change_mean']:.4f} | "
+          f"{r['streams_merged']} hot streams folded into the base")
 
 
 if __name__ == "__main__":

@@ -26,10 +26,11 @@ the XLA analogue of the five parallel sorting blocks.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .sparsity import NMSpec
 
@@ -42,12 +43,39 @@ class DSSTConfig:
     stop_step: int = 10**9     # freeze connectivity after this (RigL-style cool-down)
     frac_decay: float = 1.0    # multiplicative decay of prune_frac per event
 
-    def k_per_group(self, spec: NMSpec, step: int = 0) -> int:
-        """Static (trace-safe) number of connections recycled per group."""
-        events = max(0, step - self.start_step) // max(1, self.period)
-        frac = self.prune_frac * (self.frac_decay ** events)
+    def k_for_event(self, spec: NMSpec, event: int) -> int:
+        """Static number of connections recycled per group at the ``event``-th
+        connectivity update (``frac_decay`` applied per event)."""
+        frac = self.prune_frac * (self.frac_decay ** max(0, event))
         k = int(round(spec.n * frac))
         return max(0, min(k, spec.n - 1))
+
+    def k_per_group(self, spec: NMSpec, step: int = 0) -> int:
+        """Static (trace-safe) number of connections recycled per group at
+        ``step``. ``step`` must be a host int — for a traced step use
+        :func:`scheduled_k_apply`, which dispatches over :meth:`k_levels`."""
+        events = max(0, int(step) - self.start_step) // max(1, self.period)
+        return self.k_for_event(spec, events)
+
+    def k_levels(self, spec: NMSpec, max_events: int = 100_000
+                 ) -> Tuple[Tuple[int, int], ...]:
+        """The decay schedule as static ``(first_event, k)`` levels.
+
+        ``frac_decay`` makes k(event) monotone, so the whole schedule
+        collapses to at most ``spec.n`` distinct levels — small enough for a
+        trace-safe ``lax.switch`` (``top_k`` needs a static k; a traced step
+        therefore selects a *branch*, not a size).
+        """
+        levels = [(0, self.k_for_event(spec, 0))]
+        if self.frac_decay == 1.0:
+            return tuple(levels)
+        for e in range(1, max_events):
+            k = self.k_for_event(spec, e)
+            if k != levels[-1][1]:
+                levels.append((e, k))
+            if k == 0 or (self.frac_decay > 1.0 and k >= spec.n - 1):
+                break
+        return tuple(levels)
 
     def is_update_step(self, step) -> jax.Array:
         step = jnp.asarray(step)
@@ -198,6 +226,30 @@ def apply_dsst_to_weights(
     return w * survived.astype(w.dtype)
 
 
+def scheduled_k_apply(step: Union[int, jax.Array], cfg: DSSTConfig,
+                      spec: NMSpec, fn: Callable[[int], object]):
+    """Run ``fn(k)`` with ``k`` drawn from ``cfg``'s decay schedule at
+    ``step``, trace-safely.
+
+    ``k`` is a *shape* parameter of ``top_k``, so it must be static.  A host
+    int resolves it directly; a traced step selects among the static
+    :meth:`DSSTConfig.k_levels` with ``lax.switch`` — every branch is traced
+    with its own static k and the traced event index picks one at runtime,
+    which is how ``frac_decay``/``start_step`` finally reach the jitted
+    train step (the old code pinned k to the step-0 value forever).
+    """
+    if isinstance(step, (int, np.integer)):
+        return fn(cfg.k_per_group(spec, int(step)))
+    levels = cfg.k_levels(spec)
+    if len(levels) == 1:
+        return fn(levels[0][1])
+    event = jnp.maximum(0, jnp.asarray(step) - cfg.start_step) \
+        // max(1, cfg.period)
+    idx = (event >= jnp.asarray([e for e, _ in levels[1:]])).sum()
+    return jax.lax.switch(idx, [lambda _, k=k: fn(k) for _, k in levels],
+                          None)
+
+
 def maybe_dsst(
     step,
     cfg: DSSTConfig,
@@ -208,14 +260,18 @@ def maybe_dsst(
 ):
     """jit-safe conditional DSST event (identity off-cycle).
 
-    Returns (w, unit_mask, fresh_acc, did_update).
+    Returns (w, unit_mask, fresh_acc, did_update). The recycled-connection
+    count follows ``cfg``'s schedule (``frac_decay``/``start_step``) even
+    under a traced ``step`` — see :func:`scheduled_k_apply`.
     """
     from .sparsity import unit_scores
 
     def do(_):
         wscore = unit_scores(w, spec, *w.shape, reduce="abs_sum")
-        k = cfg.k_per_group(spec)
-        new_mask, _ = prune_regrow_factored(unit_mask, wscore, acc.pre, acc.post, spec, k)
+        new_mask, _ = scheduled_k_apply(
+            step, cfg, spec,
+            lambda k: prune_regrow_factored(unit_mask, wscore, acc.pre,
+                                            acc.post, spec, k))
         new_w = apply_dsst_to_weights(w, unit_mask, new_mask, spec)
         return new_w, new_mask, DSSTAccumulator.init(acc.pre.shape[0], acc.post.shape[0],
                                                      acc.pre.dtype), jnp.array(True)

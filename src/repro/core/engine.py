@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from . import gating as gating_lib
-from .sparsity import expand_unit_mask
+from . import topology as topology_lib
 
 BACKENDS = ("ref", "pallas", "pallas-interpret")
 
@@ -119,10 +119,8 @@ def geometry(cfg) -> Geometry:
     return Geometry(fanins=fanins, k_max=k_max, uniform=uniform)
 
 
-def _pad_rows(x, k):
-    if x.shape[0] == k:
-        return x
-    return jnp.pad(x, ((0, k - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
+# one shared zero-padding helper with the rest of the topology layout code
+_pad_rows = topology_lib._pad_rows
 
 
 def _pad_cols(x, k):
@@ -133,16 +131,12 @@ def _pad_cols(x, k):
 
 def dense_masks(mask_stacked: jax.Array, cfg) -> jax.Array:
     """Stacked unit masks ``[L, KBmax, J]`` -> dense float ``[L, Kmax, N]``
-    (zero rows where a layer's fan-in is below the stack width)."""
-    geo = geometry(cfg)
-    cols = []
-    for l, fan_in in enumerate(geo.fanins):
-        spec = cfg.spec(fan_in)
-        kb, jj = spec.unit_counts(fan_in, cfg.n_hidden)
-        d = expand_unit_mask(mask_stacked[l, :kb, :jj], spec, fan_in,
-                             cfg.n_hidden).astype(jnp.float32)
-        cols.append(_pad_rows(d, geo.k_max))
-    return jnp.stack(cols)
+    (zero rows where a layer's fan-in is below the stack width).
+
+    The expansion itself lives with the rest of the topology lifecycle in
+    ``core/topology.py``; this is the engine-facing alias.
+    """
+    return topology_lib.dense_masks(mask_stacked, cfg, dtype=jnp.float32)
 
 
 def hidden_slice(params, l: int, cfg) -> Tuple[jax.Array, jax.Array]:
@@ -321,6 +315,9 @@ class LayerOut(NamedTuple):
     gate_opened: Optional[jax.Array]
     gate_offered: Optional[jax.Array]
     open_: jax.Array                      # gate decision ([] or [S])
+    pre_mag: Optional[jax.Array]          # [S, Kmax] |pre trace|, valid-masked
+    #   (serving only; the DSST pre factor the topology service accumulates)
+    post_mag: Optional[jax.Array]         # [S, N] |OSSL modulator|, valid-masked
 
 
 def _layer_timestep(cfg, backend: Backend, geo: Geometry, learn: bool,
@@ -363,12 +360,19 @@ def _layer_timestep(cfg, backend: Backend, geo: Geometry, learn: bool,
         dw = scale * pre_tr[:, :, None] * mod[:, None, :]
         delta_new = xs.delta + dw * xs.mask_f[None]
         w_new, opened_new, offered_new = xs.w, None, None
+        # DSST factors for the live topology service: per-slot activity
+        # magnitudes, zero on invalid timesteps (slot axis survives — the
+        # slot-separability contract extends to topology telemetry)
+        valf = valid.astype(tr.dtype)[:, None]
+        pre_mag = jnp.abs(pre_tr) * valf
+        post_mag = jnp.abs(mod) * valf
     else:
         scale = jnp.where(wu_on, cfg.lr / pre.shape[0], 0.0)
         w_new = train_wu(backend, cfg, xs.w, pre_tr, mod, scale, xs.mask_f)
         delta_new = None
         opened_new = xs.gate_opened + open_.astype(jnp.float32)
         offered_new = xs.gate_offered + 1.0
+        pre_mag = post_mag = None   # training accumulates its own factors
 
     # ---- telemetry (energy model inputs), per row ----
     late = (t_row >= t_wu) & valid if serving else (t_row >= t_wu)
@@ -396,7 +400,7 @@ def _layer_timestep(cfg, backend: Backend, geo: Geometry, learn: bool,
     out = LayerOut(st=LayerState(v, tr, tr_pc, st.tr_cc), w=w_new,
                    delta=delta_new, ss_mean=new_mean,
                    gate_opened=opened_new, gate_offered=offered_new,
-                   open_=open_)
+                   open_=open_, pre_mag=pre_mag, post_mag=post_mag)
     return new_carry, out
 
 
@@ -466,7 +470,10 @@ def scan_chunk(wrep, masks_f, readout, deltas, layers: LayerState, x_tr,
 
     Engine layout: layer axis leading on ``layers``/``deltas``/``ss_mean``
     (``[L, S, ...]``); the public slot-leading layout is transposed at the
-    ``run_chunk`` boundary. Returns (deltas', state pieces, outs).
+    ``run_chunk`` boundary. Returns (deltas', state pieces, outs). The carry
+    also accumulates per-slot DSST activity factors (``acc_pre [L, S, Kmax]``,
+    ``acc_post [L, S, N]``) over the chunk — the raw material the serving
+    topology service turns into live prune/regrow epochs.
     """
     geo = geometry(cfg)
     t_pc, t_wu = _windows(cfg)
@@ -475,7 +482,7 @@ def scan_chunk(wrep, masks_f, readout, deltas, layers: LayerState, x_tr,
                    t_pc, t_wu)
 
     def ts(carry, inp):
-        layers, x_tr, ss_mean, t_w, samp, dls = carry
+        layers, x_tr, ss_mean, t_w, samp, dls, acc_pre, acc_post = carry
         x, val = inp["x"], inp["v"]
         valf = val.astype(x.dtype)[:, None]
         x = x * valf
@@ -511,9 +518,13 @@ def scan_chunk(wrep, masks_f, readout, deltas, layers: LayerState, x_tr,
                                     (1, cfg.n_layers)),
                    loss=lc.loss / cfg.n_layers,
                    steps=val.astype(jnp.float32))
-        return (rolled, x_tr, ys.ss_mean, t_w, samp, ys.delta), out
+        return (rolled, x_tr, ys.ss_mean, t_w, samp, ys.delta,
+                acc_pre + ys.pre_mag, acc_post + ys.post_mag), out
 
-    carry0 = (layers, x_tr, ss_mean, t_win, samp, deltas)
+    S = events.shape[1]
+    acc_pre0 = jnp.zeros((cfg.n_layers, S, geo.k_max))
+    acc_post0 = jnp.zeros((cfg.n_layers, S, cfg.n_hidden))
+    carry0 = (layers, x_tr, ss_mean, t_win, samp, deltas, acc_pre0, acc_post0)
     carry, outs = jax.lax.scan(ts, carry0, {"x": events, "v": valid})
     _assert_slot_separable(carry, outs, events.shape[0], events.shape[1], cfg)
     return carry, outs
@@ -524,12 +535,14 @@ def _assert_slot_separable(carry, outs, C: int, S: int, cfg) -> None:
     keeps its slot axis through the scan. A reduction over slots — which
     would silently break the slot-axis ``shard_map`` in serving/adapt.py —
     shows up at trace time as a dropped ``S`` dimension here."""
-    layers, x_tr, ss_mean, t_w, samp, dls = carry
+    layers, x_tr, ss_mean, t_w, samp, dls, acc_pre, acc_post = carry
     for leaf in jax.tree_util.tree_leaves(layers):
         assert leaf.shape[:2] == (cfg.n_layers, S), leaf.shape
     assert x_tr.shape[0] == S, x_tr.shape
     assert ss_mean.shape == (cfg.n_layers, S), ss_mean.shape
     assert t_w.shape == (S,) and samp.shape == (S,), (t_w.shape, samp.shape)
     assert dls.shape[:2] == (cfg.n_layers, S), dls.shape
+    assert acc_pre.shape[:2] == (cfg.n_layers, S), acc_pre.shape
+    assert acc_post.shape[:2] == (cfg.n_layers, S), acc_post.shape
     for name, leaf in outs.items():
         assert leaf.shape[:2] == (C, S), (name, leaf.shape)

@@ -48,11 +48,11 @@ import jax.numpy as jnp
 
 from . import engine
 from . import gating as gating_lib
-from .dsst import (DSSTAccumulator, DSSTConfig, apply_dsst_to_weights,
-                   prune_regrow_factored)
+from . import topology as topology_lib
+from .dsst import DSSTAccumulator, DSSTConfig
 from .engine import (LayerState, _cos, lif_step, ossl_modulator,  # noqa: F401
                      surrogate_grad)
-from .sparsity import NMSpec, apply_mask, paper_spec_4groups, random_unit_mask, unit_scores
+from .sparsity import NMSpec, apply_mask, paper_spec_4groups, random_unit_mask
 
 
 # ---------------------------------------------------------------------------
@@ -193,51 +193,52 @@ def run_sample(
         err = jax.nn.one_hot(label, cfg.n_out) - jax.nn.softmax(logits)   # [B, n_out]
         pr = pr + (cfg.lr_out / B) * jnp.einsum("lbn,bo->lno", layers.tr, err)
 
-    # ---- DSST statistics write-back + (maybe) connectivity update ----
-    # Once per sample (not per timestep), so the small per-layer Python loop
-    # is fine — and required, since layer fan-ins (and thus mask shapes) may
-    # differ.
-    new_acc, new_w, new_mask = [], [], []
-    geo = engine.geometry(cfg)
+    # ---- DSST statistics write-back + (maybe) stacked connectivity epoch ----
+    # Accumulator updates stay per layer (unit counts differ when fan-ins
+    # do); the prune/regrow epoch itself is ONE call into
+    # ``topology.topology_epoch`` — the identical code path the serving
+    # topology service runs between grid steps, honoring the decay schedule
+    # through the traced sample index (lax.switch over static k levels).
     pre_traces = [x_tr] + [layers.tr[l] for l in range(cfg.n_layers - 1)]
+    new_acc = []
     for l, fan_in in enumerate(cfg.layer_fanins):
         spec = cfg.spec(fan_in)
         kb, jj = spec.unit_counts(fan_in, cfg.n_hidden)
-        w = w_stacked[l, :fan_in, :]
-        mask = masks[l, :kb, :jj]
         pre_mag = jnp.abs(pre_traces[l]).mean(0)                      # [K]
         mod = ossl_modulator(layers.tr[l], layers.tr_pc[l], layers.tr_cc[l],
                              layers.v[l], cfg)
         post_mag = jnp.abs(mod).mean(0)                               # [N]
         pre_units = pre_mag.reshape(kb, -1).sum(-1)
-        acc = state.acc[l].update(pre_units, post_mag)
-        if cfg.dsst_enabled and not cfg.dense and learn:
-            def do(args):
-                w, mask, acc = args
-                wsc = unit_scores(w, spec, *w.shape, reduce="abs_sum")
-                k = cfg.dsst.k_per_group(spec)
-                nm, _ = prune_regrow_factored(mask, wsc, acc.pre, acc.post, spec, k)
-                return (apply_dsst_to_weights(w, mask, nm, spec), nm,
-                        DSSTAccumulator.init(acc.pre.shape[0], acc.post.shape[0]))
+        new_acc.append(state.acc[l].update(pre_units, post_mag))
 
-            def skip(args):
-                return args
+    new_params = {"hidden": {"w": w_stacked, "mask": masks}, "readout": pr}
+    new_acc = tuple(new_acc)
+    if cfg.dsst_enabled and not cfg.dense and learn:
+        pre_stacked = jnp.stack([engine._pad_rows(a.pre, masks.shape[1])
+                                 for a in new_acc])                   # [L, KBmax]
+        post_stacked = jnp.stack([a.post for a in new_acc])           # [L, J]
 
-            w, mask, acc = jax.lax.cond(
-                cfg.dsst.is_update_step(state.sample_idx), do, skip, (w, mask, acc))
-        new_acc.append(acc)
-        new_w.append(engine._pad_rows(w, geo.k_max))
-        new_mask.append(engine._pad_rows(mask, geo.k_max))
+        def do(args):
+            p, accs = args
+            p2, _ = topology_lib.topology_epoch(p, pre_stacked, post_stacked,
+                                                cfg, step=state.sample_idx)
+            fresh = tuple(DSSTAccumulator.init(a.pre.shape[0], a.post.shape[0])
+                          for a in accs)
+            return p2, fresh
+
+        def skip(args):
+            return args
+
+        new_params, new_acc = jax.lax.cond(
+            cfg.dsst.is_update_step(state.sample_idx), do, skip,
+            (new_params, new_acc))
 
     # ---- roll the CC slot: final trace of this sample becomes the negative ----
     final_layers = LayerState(
         v=jnp.zeros_like(layers.v), tr=jnp.zeros_like(layers.tr),
         tr_pc=jnp.zeros_like(layers.tr_pc), tr_cc=layers.tr)
-
-    new_params = {"hidden": {"w": jnp.stack(new_w), "mask": jnp.stack(new_mask)},
-                  "readout": pr}
     new_state = NetState(layers=final_layers, x_tr=jnp.zeros_like(x_tr),
-                         gate=gate_st, acc=tuple(new_acc),
+                         gate=gate_st, acc=new_acc,
                          sample_idx=state.sample_idx + 1)
     metrics = SampleMetrics(
         logits=logits,
@@ -320,6 +321,8 @@ class ChunkMetrics(NamedTuple):
     gate_offered: jax.Array    # [S, L]
     local_loss: jax.Array      # [S] summed OSSL loss over late TSs
     steps: jax.Array           # [S] valid timesteps processed
+    pre_mag: jax.Array         # [S, L, Kmax] summed |pre trace| (DSST factor)
+    post_mag: jax.Array        # [S, L, N] summed |OSSL modulator| (DSST factor)
 
 
 def _to_engine(tree):
@@ -347,11 +350,12 @@ def run_chunk(
     masks_f = engine.dense_masks(masks, cfg)
     wrep = engine.prepare_weights(params["hidden"]["w"], masks, cfg, backend)
 
-    (layers, x_tr, ss_mean, t_win, samp, dls), outs = engine.scan_chunk(
-        wrep, masks_f, params["readout"], _to_engine(deltas),
-        _to_engine(state.layers), state.x_tr, state.ss_mean.T,
-        state.t_in_window, state.sample_idx, events, valid, cfg, backend,
-        learn)
+    (layers, x_tr, ss_mean, t_win, samp, dls, acc_pre, acc_post), outs = \
+        engine.scan_chunk(
+            wrep, masks_f, params["readout"], _to_engine(deltas),
+            _to_engine(state.layers), state.x_tr, state.ss_mean.T,
+            state.t_in_window, state.sample_idx, events, valid, cfg, backend,
+            learn)
 
     new_state = StreamState(layers=_to_engine(layers), x_tr=x_tr,
                             ss_mean=ss_mean.T, t_in_window=t_win,
@@ -366,6 +370,8 @@ def run_chunk(
         gate_offered=outs["offered"].sum(0),
         local_loss=outs["loss"].sum(0),
         steps=outs["steps"].sum(0),
+        pre_mag=_to_engine(acc_pre),
+        post_mag=_to_engine(acc_post),
     )
     # slot-separability contract (backs the slot-axis shard_map in serving):
     # metric reductions run over time only — the S axis survives everywhere
@@ -377,6 +383,9 @@ def run_chunk(
         assert leaf.shape == (S,), leaf.shape
     assert metrics.gate_opened.shape == metrics.gate_offered.shape \
         == (S, cfg.n_layers), metrics.gate_opened.shape
+    assert metrics.pre_mag.shape[:2] == (S, cfg.n_layers), metrics.pre_mag.shape
+    assert metrics.post_mag.shape == (S, cfg.n_layers, cfg.n_hidden), \
+        metrics.post_mag.shape
     return _to_engine(dls), new_state, metrics
 
 

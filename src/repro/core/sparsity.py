@@ -117,10 +117,14 @@ def expand_unit_mask(unit_mask: jax.Array, spec: NMSpec, k: int, o: int) -> jax.
 
 
 def check_unit_mask(unit_mask: jax.Array, spec: NMSpec) -> jax.Array:
-    """True iff every (group, out-tile) keeps exactly n units."""
-    kb, j = unit_mask.shape
+    """True iff every (group, out-tile) keeps exactly n units.
+
+    Accepts any leading batch dims (``[..., KB, J]``) sharing one spec —
+    a stacked ``[L, KB, J]`` topology checks in one call.
+    """
+    *lead, kb, j = unit_mask.shape
     g = kb // spec.m
-    counts = unit_mask.reshape(g, spec.m, j).sum(axis=1)
+    counts = unit_mask.reshape(*lead, g, spec.m, j).sum(axis=-2)
     return jnp.all(counts == spec.n)
 
 

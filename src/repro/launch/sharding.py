@@ -281,7 +281,7 @@ def chunk_step_specs() -> Tuple[Tuple, Tuple]:
     metrics = ChunkMetrics(
         logits=s1, window_end=s1, sop_forward=s0, sop_wu=s0,
         sop_wu_offered=s0, gate_opened=s0, gate_offered=s0,
-        local_loss=s0, steps=s0)
+        local_loss=s0, steps=s0, pre_mag=s0, post_mag=s0)
     in_specs = (P(), s0, s0, s1, s1, s0)
     out_specs = (s0, s0, metrics)
     return in_specs, out_specs

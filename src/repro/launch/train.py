@@ -119,15 +119,20 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams, probe: bool = False):
 
         params, opt_state, om = adamw_update(grads, params, opt_state, hp.opt, scale)
 
-        # --- DSST connectivity event (masked N:M configs)
-        if hp.dsst_every and cfg.sparsity and cfg.sparsity.mode == "masked":
-            def ev(p):
-                return lm_dsst_event(p, grads, cfg.sparsity)[0]
-            params = jax.lax.cond(
-                opt_state.step % hp.dsst_every == 0, ev, lambda p: p, params)
-
+        # --- DSST connectivity event (masked N:M configs): the stacked
+        # prune/regrow path shared with the SNN topology epoch; the
+        # mask-change fraction surfaces in metrics instead of being dropped
         metrics = {"loss": loss, "ce": ce, "gate_frac": gate_frac,
                    "moe_dropped": aux["moe_dropped"], **om}
+        if hp.dsst_every and cfg.sparsity and cfg.sparsity.mode == "masked":
+            def ev(p):
+                newp, stats = lm_dsst_event(p, grads, cfg.sparsity)
+                return newp, stats["dsst_mask_change"]
+            params, mask_change = jax.lax.cond(
+                opt_state.step % hp.dsst_every == 0, ev,
+                lambda p: (p, jnp.zeros(())), params)
+            metrics["dsst_mask_change"] = mask_change
+
         return params, opt_state, sparse_state, metrics
 
     return train_step

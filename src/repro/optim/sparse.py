@@ -21,6 +21,7 @@ from repro.configs.base import SparsityConfig
 from repro.core import gating as gating_lib
 from repro.core.dsst import prune_regrow
 from repro.core.sparsity import NMSpec
+from repro.core.topology import prune_regrow_stacked
 
 
 class SparseTrainState(NamedTuple):
@@ -119,13 +120,14 @@ def lm_dsst_event(params, grads, sp: SparsityConfig) -> Tuple[Any, Dict[str, jax
             return nm, st.mask_change
 
         if w.ndim > 2:   # stacked [L, ...] or experts [L, E, ...]
-            lead = umask.shape[:-2]
+            # one topology-stacked event over the flattened leading dims —
+            # the same vmapped prune/regrow the SNN epoch runs
             um2 = umask.reshape((-1,) + umask.shape[-2:])
             ws2 = wsc.reshape((-1,) + wsc.shape[-2:])
             gs2 = gsc.reshape((-1,) + gsc.shape[-2:])
-            nm2, fl = jax.vmap(ev)(um2, ws2, gs2)
+            nm2, st = prune_regrow_stacked(um2, ws2, gs2, spec1, k_re)
             new_umask = nm2.reshape(umask.shape)
-            flip = fl.mean()
+            flip = st.mask_change.mean()
         else:
             new_umask, flip = ev(umask, wsc, gsc)
         flips_total[0] = flips_total[0] + flip

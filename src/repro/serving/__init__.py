@@ -11,11 +11,14 @@ from .session import (SessionStatus, StreamSession, WindowPrediction,
                       fresh_lane_state, read_lane, reset_lane, write_lane)
 from .stream_source import ArrivalConfig, ReplaySource, TaskStreamSource
 from .telemetry import FleetTelemetry, StreamCounters
+from .topology_service import (TopologyEpochEvent, TopologyService,
+                               TopologyServiceConfig)
 
 __all__ = [
     "AdaptConfig", "ArrivalConfig", "FleetTelemetry", "ReplaySource",
     "SessionStatus", "StreamCounters", "StreamScheduler", "StreamSession",
-    "TaskStreamSource", "WindowPrediction", "delta_norms", "fresh_lane_state",
-    "make_chunk_fn", "merge_lane_into_base", "read_lane", "reset_lane",
-    "write_lane",
+    "TaskStreamSource", "TopologyEpochEvent", "TopologyService",
+    "TopologyServiceConfig", "WindowPrediction", "delta_norms",
+    "fresh_lane_state", "make_chunk_fn", "merge_lane_into_base", "read_lane",
+    "reset_lane", "write_lane",
 ]

@@ -132,8 +132,11 @@ def merge_lane_into_base(params: Dict[str, Any], deltas: jax.Array, slot: int,
 
     The N:M mask is re-applied so the base stays sparse (deltas are already
     mask-projected at update time; this re-asserts the invariant exactly).
+    Only ``hidden/w`` is rebuilt — every other key in ``params`` (present or
+    added by a future PR) rides through the generic dict update untouched,
+    instead of being silently dropped by a hand-rolled rebuild.  The serving
+    topology service reuses this as its fold-hot-streams step.
     """
     masks_f = engine.dense_masks(params["hidden"]["mask"], cfg)
     w = (params["hidden"]["w"] + weight * deltas[slot]) * masks_f
-    return {"hidden": {"w": w, "mask": params["hidden"]["mask"]},
-            "readout": params["readout"]}
+    return {**params, "hidden": {**params["hidden"], "w": w}}

@@ -25,6 +25,13 @@ shards over devices: slot allocation pads to the device count, the chunk
 step runs under slot-axis ``shard_map`` (bit-identical to 1-device — see
 serving/adapt.py), and lane surgery re-places its result so the slot
 sharding survives admit/retire.
+
+With a ``TopologyService`` attached, every step also feeds the service's
+DSST accumulators and ``maybe_evolve_topology()`` runs due prune/regrow
+epochs *between* grid steps: the evolved ``(params, deltas)`` keep their
+shapes and slot shardings, so the swap is atomic from the streams' point
+of view and the chunk step never recompiles (see
+serving/topology_service.py).
 """
 from __future__ import annotations
 
@@ -49,9 +56,14 @@ class StreamScheduler:
                  chunk_len: int = 8, adapt: Optional[AdaptConfig] = None,
                  clock_dt_s: float = 0.002,
                  telemetry: Optional[FleetTelemetry] = None,
-                 mesh=None):
+                 mesh=None, topology=None):
         self.params, self.cfg = params, cfg
         self.mesh = mesh
+        self.topology = topology          # Optional[TopologyService]
+        if topology is not None and topology.cfg != cfg:
+            # fail here, not at the first epoch with a half-evolved fleet
+            raise ValueError("topology service was built for a different "
+                             "SNNConfig than this scheduler's")
         if mesh is not None:
             # device-count-aware slot allocation: the grid is padded to a
             # multiple of the slot-mesh size so every device owns an equal
@@ -146,6 +158,15 @@ class StreamScheduler:
         self.telemetry.record_step(time.perf_counter() - t0)
         self.grid.tick()
 
+        want_factors = self.topology is not None and not self.topology.frozen
+        if not want_factors:
+            # only a live topology service consumes the DSST factors — don't
+            # pay their device->host transfer (a frozen service included).
+            # When wanted they cross per-slot, NOT pre-summed on device: the
+            # service's host-side np reduction is what keeps the 1-device
+            # and sharded fleets' epoch decisions bit-identical (an XLA /
+            # cross-device reduction order may differ from np's).
+            m = m._replace(pre_mag=None, post_mag=None)
         m = jax.device_get(m)                  # one transfer for all metrics
         logits = m.logits                      # [C, S, n_out]
         wend = m.window_end                    # [C, S]
@@ -171,7 +192,37 @@ class StreamScheduler:
                     logits=logits[t, slot].copy()))
             if sess.exhausted:
                 self._retire(slot)
+        if want_factors:
+            self.topology.observe(m)
+            self.maybe_evolve_topology()
         return fed
+
+    # -- live topology evolution --------------------------------------------
+    def maybe_evolve_topology(self, force: bool = False):
+        """Run a due DSST prune/regrow epoch between grid steps.
+
+        The service returns ``(params, deltas)`` with identical shapes and
+        slot shardings, so installing them is an atomic swap: active
+        sessions keep their lanes and carried state, and the next grid step
+        reuses the already-compiled chunk fn (``n_compiles`` stays 1).
+        Returns the ``TopologyEpochEvent`` when an epoch ran, else None.
+        """
+        svc = self.topology
+        step = self.grid.stats["steps"]
+        if svc is None or not (force or svc.due(step)):
+            return None
+        merge_slots = tuple(
+            slot for slot, sess in enumerate(self.grid.occupant)
+            if sess is not None and sess.adapt)
+        params, deltas, event = svc.evolve(
+            self.params, self.deltas, merge_slots=merge_slots, grid_step=step)
+        self.params = params
+        self._replace_lanes(self.state, deltas)
+        self.telemetry.record_topology_epoch(
+            grid_step=event.grid_step, pruned=event.pruned,
+            regrown=event.regrown, mask_change=event.mask_change,
+            merged_streams=len(event.merged_slots))
+        return event
 
     def run_until_drained(self, max_steps: int = 100_000) -> List[StreamSession]:
         while not self.grid.drained:

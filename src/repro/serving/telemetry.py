@@ -10,7 +10,10 @@ of the chunk metrics.
 
 ``FleetTelemetry`` also tracks host-side step latencies (the wall time of
 one jitted slot-grid step) for the p50/p99 numbers in the serving
-benchmark.
+benchmark, and — when a ``TopologyService`` drives live DSST epochs — a
+log of topology events (per-epoch pruned/regrown counts, mask-change
+fraction, hot-stream merges) so an operator can see connectivity churn
+next to the energy counters it is supposed to pay for.
 """
 from __future__ import annotations
 
@@ -73,6 +76,7 @@ class FleetTelemetry:
         self.streams: Dict[int, StreamCounters] = {}
         self.step_latencies_s: List[float] = []
         self.steps = 0
+        self.topology_epochs: List[dict] = []
 
     def stream(self, sid: int) -> StreamCounters:
         if sid not in self.streams:
@@ -82,6 +86,15 @@ class FleetTelemetry:
     def record_step(self, latency_s: float) -> None:
         self.steps += 1
         self.step_latencies_s.append(float(latency_s))
+
+    def record_topology_epoch(self, *, grid_step: int, pruned: int,
+                              regrown: int, mask_change: float,
+                              merged_streams: int) -> None:
+        """Log one live DSST prune/regrow epoch (topology_service.py)."""
+        self.topology_epochs.append({
+            "grid_step": int(grid_step), "pruned": int(pruned),
+            "regrown": int(regrown), "mask_change": float(mask_change),
+            "merged_streams": int(merged_streams)})
 
     # -- rollup --------------------------------------------------------------
     def latency_percentiles(self) -> dict:
@@ -112,8 +125,20 @@ class FleetTelemetry:
             "events_per_s": tot.events_in / wall if wall > 0 else 0.0,
             "timesteps_per_s": tot.timesteps / wall if wall > 0 else 0.0,
             **self.latency_percentiles(),
+            **self.topology_rollup(),
         }
         return out
+
+    def topology_rollup(self) -> dict:
+        ep = self.topology_epochs
+        return {
+            "topology_epochs": len(ep),
+            "topology_pruned": sum(e["pruned"] for e in ep),
+            "topology_regrown": sum(e["regrown"] for e in ep),
+            "topology_mask_change_mean":
+                float(np.mean([e["mask_change"] for e in ep])) if ep else 0.0,
+            "streams_merged": sum(e["merged_streams"] for e in ep),
+        }
 
     def per_stream(self) -> List[dict]:
         return [c.energy(self.op) for _, c in sorted(self.streams.items())]

@@ -1,0 +1,218 @@
+"""Live DSST topology evolution under serving traffic.
+
+PR 1–3 froze the N:M topology the moment a fleet started serving: the base
+weights and mask were whatever offline training left behind, and only the
+per-stream deltas moved.  ElfCore's claim is stronger — dynamic structured
+sparse training, online self-supervised learning and activity-dependent
+updates run *together* — so this service closes the loop: the connectivity
+itself keeps evolving from live activity, without draining a single session.
+
+The cycle, driven by ``StreamScheduler.maybe_evolve_topology()``:
+
+1. **Accumulate** — every grid step the chunk metrics carry per-slot DSST
+   factors (``pre_mag [S, L, Kmax]`` = summed |pre trace|, ``post_mag
+   [S, L, N]`` = summed |OSSL modulator|; computed valid-masked inside the
+   engine scan).  :meth:`TopologyService.observe` folds them into one
+   decaying ``DSSTAccumulator`` per layer, stacked — O(K + N) per layer,
+   the chip's factorized write-back.
+2. **Fold** — hot streams' adaptations are promoted into the shared base
+   (``adapt.merge_lane_into_base``, the generic pytree update): the lanes
+   with the largest delta norms among the active adaptive slots merge with
+   ``merge_weight`` and their lane delta is scaled down by the same factor,
+   so a fully-merged lane's *effective* weights are bit-identical across
+   the fold.
+3. **Evolve** — one stacked prune/regrow epoch via
+   ``core.topology.topology_epoch`` — the *same* code path the offline
+   train step runs — with ``k`` following the ``DSSTConfig`` decay schedule
+   at the service's epoch index.
+4. **Remap & swap** — weights keep surviving values bit-exactly (recycled
+   coordinates restart at zero) and the slot-sharded delta tensor is
+   projected through ``topology.project_deltas`` (survivors bit-exact,
+   pruned zeroed).  Everything keeps its shape, dtype and sharding, so the
+   scheduler swaps ``(params, deltas)`` between grid steps with **zero
+   recompilation** of the chunk step — the exactly-N-per-group invariant is
+   asserted after every epoch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology as topology_lib
+from repro.core.snn import ChunkMetrics, SNNConfig
+
+from .adapt import delta_norms, merge_lane_into_base
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyServiceConfig:
+    epoch_every: int = 100       # grid steps between prune/regrow epochs
+    accum_decay: float = 0.9     # per-grid-step decay of the pre/post factors
+    min_observed_steps: float = 1.0   # valid timesteps required before an epoch
+    merge_top: int = 0           # hot streams folded into the base per epoch
+    merge_weight: float = 1.0    # fraction of a hot lane's delta promoted
+    merge_min_norm: float = 1e-6  # lanes below this delta norm never merge
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyEpochEvent:
+    """What one live prune/regrow epoch did (telemetry record)."""
+    epoch: int                   # 0-based epoch index
+    grid_step: int               # scheduler step the swap landed after
+    pruned: int                  # connections recycled (sum over layers)
+    regrown: int
+    mask_change: float           # mean fraction of units flipped per layer
+    merged_slots: Tuple[int, ...]  # hot lanes folded into the base first
+
+
+class TopologyService:
+    """Accumulates live DSST factors and evolves the fleet's topology.
+
+    Host-side object: the accumulators are tiny (O(L·(K + N))) numpy
+    buffers fed from already-fetched chunk metrics; the epoch itself runs
+    as ordinary jax ops on the scheduler's (possibly slot-sharded) arrays.
+    One service instance belongs to one scheduler/fleet.
+    """
+
+    def __init__(self, cfg: SNNConfig,
+                 service: Optional[TopologyServiceConfig] = None):
+        self.cfg = cfg
+        self.service = service or TopologyServiceConfig()
+        kbs, js = [], []
+        for fan_in in cfg.layer_fanins:
+            kb, j = cfg.spec(fan_in).unit_counts(fan_in, cfg.n_hidden)
+            kbs.append(kb)
+            js.append(j)
+        self._kbs, self._js = kbs, js
+        self._kb_max = max(kbs)
+        self._j_max = max(js)
+        self.epoch_idx = 0
+        self.observed_steps = 0.0
+        self._last_epoch_step = 0
+        self.events: List[TopologyEpochEvent] = []
+        self._reset_accumulators()
+
+    def _reset_accumulators(self) -> None:
+        # Both factors are accumulated, as the chip writes both back. Note
+        # that under the rank-1 factored regrow the within-group ranking
+        # depends on |pre| alone (prune_regrow_factored discards the column
+        # factor); |post| is carried for parity with the train-path
+        # accumulator and for scorers that do consume it (dense-oracle
+        # fallback, cross-group tie-breaking).
+        L = self.cfg.n_layers
+        self.pre = np.zeros((L, self._kb_max), np.float32)
+        self.post = np.zeros((L, self._j_max), np.float32)
+        self.observed_steps = 0.0
+
+    # -- 1. accumulate --------------------------------------------------------
+    def observe(self, metrics: ChunkMetrics) -> None:
+        """Fold one grid step's chunk metrics into the decaying factors.
+
+        ``metrics`` is the (host-fetched) ``ChunkMetrics`` of a chunk step;
+        ``pre_mag``/``post_mag`` are valid-masked inside the engine, so idle
+        slots and ragged tails contribute exactly zero.  The slot reduction
+        happens HERE, on host with one fixed np summation order — that is
+        what keeps epoch decisions bit-identical between the 1-device and
+        slot-sharded fleets (a device-side reduction's order may not match).
+        """
+        pre = np.asarray(metrics.pre_mag, np.float32).sum(0)   # [L, Kmax]
+        post = np.asarray(metrics.post_mag, np.float32).sum(0)  # [L, N]
+        d = self.service.accum_decay
+        self.pre *= d
+        self.post *= d
+        for l, fan_in in enumerate(self.cfg.layer_fanins):
+            kb, j = self._kbs[l], self._js[l]
+            self.pre[l, :kb] += pre[l, :fan_in].reshape(kb, -1).sum(-1)
+            self.post[l, :j] += post[l].reshape(j, -1).sum(-1)
+        self.observed_steps += float(np.asarray(metrics.steps).sum())
+
+    @property
+    def virtual_step(self) -> int:
+        """The host-int step the next epoch presents to the DSST schedule —
+        epoch index mapped onto the config's period, so ``frac_decay``/
+        ``start_step``/``stop_step`` mean the same thing they do offline."""
+        dcfg = self.cfg.dsst
+        return dcfg.start_step + self.epoch_idx * max(1, dcfg.period)
+
+    @property
+    def frozen(self) -> bool:
+        """True when the config says connectivity must not evolve: DSST off,
+        dense baseline, or past the RigL-style ``stop_step`` cool-down —
+        serve honors the same freeze the train path enforces via
+        ``is_update_step``."""
+        return (not self.cfg.dsst_enabled or self.cfg.dense
+                or self.virtual_step >= self.cfg.dsst.stop_step)
+
+    def due(self, grid_step: int) -> bool:
+        """True when the next prune/regrow epoch should run after this grid
+        step: connectivity is not frozen, the cadence has elapsed AND enough
+        valid traffic was observed (an idle fleet never churns its topology
+        on all-zero scores)."""
+        if self.frozen:
+            return False
+        if grid_step - self._last_epoch_step < self.service.epoch_every:
+            return False
+        return self.observed_steps >= self.service.min_observed_steps
+
+    # -- 2. fold hot streams --------------------------------------------------
+    def _fold_hot_streams(self, params: Dict[str, Any], deltas: jnp.ndarray,
+                          merge_slots: Sequence[int]
+                          ) -> Tuple[Dict[str, Any], jnp.ndarray, Tuple[int, ...]]:
+        svc = self.service
+        if svc.merge_top <= 0 or not merge_slots:
+            return params, deltas, ()
+        norms = np.asarray(delta_norms(deltas))
+        eligible = [s for s in merge_slots if norms[s] > svc.merge_min_norm]
+        hot = tuple(sorted(eligible, key=lambda s: -norms[s])[: svc.merge_top])
+        for slot in hot:
+            params = merge_lane_into_base(params, deltas, slot, self.cfg,
+                                          weight=svc.merge_weight)
+            if svc.merge_weight >= 1.0:
+                # exact: the lane's effective weights are unchanged bits
+                lane = jnp.zeros_like(deltas[slot])
+            else:
+                lane = deltas[slot] * (1.0 - svc.merge_weight)
+            deltas = deltas.at[slot].set(lane)
+        return params, deltas, hot
+
+    # -- 3 & 4. evolve + remap ------------------------------------------------
+    def evolve(self, params: Dict[str, Any], deltas: jnp.ndarray,
+               merge_slots: Sequence[int] = (), grid_step: int = 0
+               ) -> Tuple[Dict[str, Any], jnp.ndarray, TopologyEpochEvent]:
+        """One live topology epoch. Returns ``(params', deltas', event)``.
+
+        Shapes, dtypes and (slot-)shardings of both outputs match the
+        inputs, so the caller installs them with a plain swap between grid
+        steps — no session drains, no recompilation.
+        """
+        if self.frozen:
+            raise ValueError(
+                "topology is frozen (dsst disabled, dense baseline, or past "
+                f"stop_step={self.cfg.dsst.stop_step}); refusing to evolve")
+        params, deltas, merged = self._fold_hot_streams(
+            params, deltas, merge_slots)
+
+        old_mask = params["hidden"]["mask"]
+        # host-int virtual step -> this epoch's k from the decay schedule
+        new_params, stats = topology_lib.topology_epoch(
+            params, jnp.asarray(self.pre), jnp.asarray(self.post),
+            self.cfg, step=self.virtual_step)
+        new_deltas = topology_lib.project_deltas(
+            deltas, old_mask, new_params["hidden"]["mask"], self.cfg)
+
+        assert topology_lib.check(new_params["hidden"]["mask"], self.cfg), \
+            "topology epoch violated the exactly-N-per-group invariant"
+
+        event = TopologyEpochEvent(
+            epoch=self.epoch_idx, grid_step=int(grid_step),
+            pruned=int(stats.total_pruned), regrown=int(stats.total_regrown),
+            mask_change=float(np.asarray(stats.mask_change).mean()),
+            merged_slots=merged)
+        self.events.append(event)
+        self.epoch_idx += 1
+        self._last_epoch_step = int(grid_step)
+        self._reset_accumulators()
+        return new_params, new_deltas, event

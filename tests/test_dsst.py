@@ -95,3 +95,30 @@ def test_maybe_dsst_period():
     w2, m2, _, did2 = dsst.maybe_dsst(4, cfg, spec, w, mask, acc)
     assert bool(did2)
     assert bool(sp.check_unit_mask(m2, spec))
+
+
+def test_maybe_dsst_respects_frac_decay_and_start_step():
+    """Regression: the event's k used to ignore the step entirely, so
+    frac_decay/start_step never changed the recycled count. (The jitted
+    traced-step path is pinned in tests/test_topology.py.)"""
+    spec = sp.NMSpec(4, 8)
+    cfg = dsst.DSSTConfig(period=5, prune_frac=0.5, frac_decay=0.5,
+                          start_step=5)
+    mask = sp.random_unit_mask(jax.random.PRNGKey(0), spec, 32, 4)
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 4))
+    acc = dsst.DSSTAccumulator.init(32, 4)
+    acc = acc.update(
+        jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (32,))) + 0.01,
+        jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (4,))) + 0.01)
+    g = 32 // spec.m
+    # event 0 (step 9): k = round(4*0.5) = 2
+    _, m0, _, did0 = dsst.maybe_dsst(9, cfg, spec, w, mask, acc)
+    assert bool(did0)
+    assert int((np.asarray(mask) & ~np.asarray(m0)).sum()) == 2 * g * 4
+    # event 1 (step 14): k decayed to 1
+    _, m1, _, did1 = dsst.maybe_dsst(14, cfg, spec, w, mask, acc)
+    assert bool(did1)
+    assert int((np.asarray(mask) & ~np.asarray(m1)).sum()) == 1 * g * 4
+    # before start_step: no event at all
+    _, m2, _, did2 = dsst.maybe_dsst(4, cfg, spec, w, mask, acc)
+    assert not bool(did2)

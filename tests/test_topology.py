@@ -1,0 +1,231 @@
+"""Topology lifecycle: stacked epochs, delta projection, the DSST schedule.
+
+The contract pinned here backs the live-topology serving service:
+
+* one stacked ``topology_epoch`` == the per-layer reference events;
+* ``project_deltas`` keeps surviving connections' delta values BIT-exactly
+  and zeroes pruned/regrown coordinates (property-tested);
+* the ``DSSTConfig`` decay schedule is honored under jit — ``frac_decay``
+  and ``start_step`` change the recycled-connection count at the scheduled
+  steps (regression: ``k_per_group`` used to be called without the step,
+  pinning k to its step-0 value forever).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _compat import given, settings, strategies as st
+
+from repro.core import dsst, sparsity as sp, topology
+from repro.core.snn import (SNNConfig, init_params, init_state,
+                            init_stream_deltas, run_sample)
+
+CFG = SNNConfig(n_in=32, n_hidden=32, n_layers=2, n_out=8, t_steps=16,
+                dsst=dsst.DSSTConfig(period=4, prune_frac=0.5))
+
+
+def _params(seed=0, cfg=CFG):
+    return init_params(jax.random.PRNGKey(seed), cfg)
+
+
+def _factors(seed, cfg=CFG):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    kb = max(cfg.layer_fanins)
+    pre = jnp.abs(jax.random.normal(ks[0], (cfg.n_layers, kb))) + 0.01
+    post = jnp.abs(jax.random.normal(ks[1], (cfg.n_layers, cfg.n_hidden))) + 0.01
+    return pre, post
+
+
+# -------------------------------------------------------------- the value
+
+def test_from_params_install_roundtrip_preserves_extra_keys():
+    params = _params()
+    topo = topology.from_params(params, CFG)
+    assert topo.idx is not None                      # uniform geometry
+    spec = CFG.spec(CFG.layer_fanins[0])
+    g = CFG.layer_fanins[0] // spec.m
+    assert topo.idx.shape == (CFG.n_layers, g, spec.n, CFG.n_hidden)
+    # idx really is the compact view of the mask
+    for l in range(CFG.n_layers):
+        back = sp.indices_to_unit_mask(topo.idx[l], spec)
+        np.testing.assert_array_equal(np.asarray(back),
+                                      np.asarray(topo.unit_mask[l]))
+    # generic install: future params keys survive at both nesting levels
+    fat = {**params, "aux_head": jnp.ones(3),
+           "hidden": {**params["hidden"], "scales": jnp.ones(2)}}
+    out = topology.install(topo, fat)
+    assert "aux_head" in out and "scales" in out["hidden"]
+    np.testing.assert_array_equal(np.asarray(out["hidden"]["mask"]),
+                                  np.asarray(topo.unit_mask))
+    assert topology.check(topo, CFG)
+
+
+def test_check_rejects_broken_invariant():
+    params = _params()
+    mask = np.asarray(params["hidden"]["mask"]).copy()
+    mask[0, :, 0] = True                             # too many per group
+    assert not topology.check(jnp.asarray(mask), CFG)
+
+
+# -------------------------------------------------------------- stacked epoch
+
+def test_stacked_epoch_equals_per_layer_reference():
+    """topology_epoch == hand-rolled per-layer prune/regrow + weight remap
+    (the exact code run_sample used before the refactor)."""
+    cfg = CFG
+    params = _params(1)
+    pre, post = _factors(7)
+    new_params, stats = topology.topology_epoch(params, pre, post, cfg, step=0)
+
+    spec = cfg.spec(cfg.layer_fanins[0])
+    k = cfg.dsst.k_per_group(spec, 0)
+    assert k >= 1, "test config must actually recycle connections"
+    for l, fan_in in enumerate(cfg.layer_fanins):
+        kb, j = spec.unit_counts(fan_in, cfg.n_hidden)
+        w = params["hidden"]["w"][l, :fan_in]
+        mask = params["hidden"]["mask"][l, :kb, :j]
+        wsc = sp.unit_scores(w, spec, fan_in, cfg.n_hidden)
+        ref_mask, ref_stats = dsst.prune_regrow_factored(
+            mask, wsc, pre[l, :kb], post[l, :j], spec, k)
+        ref_w = dsst.apply_dsst_to_weights(w, mask, ref_mask, spec)
+        np.testing.assert_array_equal(
+            np.asarray(new_params["hidden"]["mask"][l, :kb, :j]),
+            np.asarray(ref_mask))
+        np.testing.assert_array_equal(
+            np.asarray(new_params["hidden"]["w"][l, :fan_in]),
+            np.asarray(ref_w))
+        assert int(stats.pruned[l]) == int(ref_stats.pruned)
+        assert int(stats.regrown[l]) == int(ref_stats.regrown)
+    assert topology.check(new_params["hidden"]["mask"], cfg)
+    # readout untouched, bitwise
+    np.testing.assert_array_equal(np.asarray(new_params["readout"]),
+                                  np.asarray(params["readout"]))
+
+
+def test_epoch_prunes_exactly_k_per_group():
+    cfg = CFG
+    params = _params(2)
+    pre, post = _factors(9)
+    _, stats = topology.topology_epoch(params, pre, post, cfg, step=0)
+    spec = cfg.spec(cfg.layer_fanins[0])
+    k = cfg.dsst.k_per_group(spec, 0)
+    g = cfg.layer_fanins[0] // spec.m
+    for l in range(cfg.n_layers):
+        assert int(stats.pruned[l]) == k * g * cfg.n_hidden
+        assert int(stats.pruned[l]) == int(stats.regrown[l])
+
+
+# -------------------------------------------------------------- delta projection
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_project_deltas_bit_exact(seed):
+    """Across any mask change: surviving coordinates keep their delta BITS,
+    pruned coordinates go to exactly zero, and the new mask keeps N:M."""
+    cfg = CFG
+    params = _params(seed % 7)
+    pre, post = _factors(seed)
+    deltas = jax.random.normal(jax.random.PRNGKey(seed),
+                               (3,) + params["hidden"]["w"].shape)
+    old_mask = params["hidden"]["mask"]
+    # deltas live on the old mask's support (the engine's invariant)
+    deltas = deltas * topology.dense_masks(old_mask, cfg)[None]
+
+    new_params, _ = topology.topology_epoch(params, pre, post, cfg, step=0)
+    new_mask = new_params["hidden"]["mask"]
+    assert topology.check(new_mask, cfg)
+    proj = topology.project_deltas(deltas, old_mask, new_mask, cfg)
+
+    surv = np.asarray(topology.survivors_dense(old_mask, new_mask, cfg))
+    d0, d1 = np.asarray(deltas), np.asarray(proj)
+    # survivors: identical bits (not just allclose)
+    np.testing.assert_array_equal(d1[:, surv], d0[:, surv])
+    # everything else: exactly zero
+    assert np.all(d1[:, ~surv] == 0.0)
+    # something was actually pruned, or the test is vacuous
+    pruned = np.asarray(old_mask) & ~np.asarray(new_mask)
+    assert pruned.any()
+
+
+# -------------------------------------------------------------- the schedule
+
+def test_k_levels_and_k_per_group_follow_decay():
+    spec = sp.NMSpec(4, 8)
+    cfg = dsst.DSSTConfig(period=5, prune_frac=0.5, frac_decay=0.5,
+                          start_step=10)
+    # event 0 -> k=2, event 1 -> k=1, event 2 -> k=0 (round(0.5)=0)
+    assert cfg.k_levels(spec) == ((0, 2), (1, 1), (2, 0))
+    assert cfg.k_per_group(spec, 10) == 2
+    assert cfg.k_per_group(spec, 14) == 2
+    assert cfg.k_per_group(spec, 15) == 1     # event 1
+    assert cfg.k_per_group(spec, 20) == 0     # event 2: decayed away
+    # no decay: single level
+    assert dsst.DSSTConfig(prune_frac=0.5).k_levels(spec) == ((0, 2),)
+
+
+def test_maybe_dsst_honors_schedule_under_jit():
+    """Regression: maybe_dsst pinned k to its step-0 value forever. With
+    frac_decay the recycled count must shrink at later scheduled steps —
+    also under a traced step (lax.switch over the static levels)."""
+    spec = sp.NMSpec(4, 8)
+    cfg = dsst.DSSTConfig(period=5, prune_frac=0.5, frac_decay=0.5)
+    mask = sp.random_unit_mask(jax.random.PRNGKey(0), spec, 32, 4)
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 4))
+    acc = dsst.DSSTAccumulator.init(32, 4).update(
+        jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (32,))) + 0.01,
+        jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (4,))) + 0.01)
+
+    fn = jax.jit(lambda s: dsst.maybe_dsst(s, cfg, spec, w, mask, acc))
+    g = 32 // spec.m
+    # event 0 at step 4: k=2 -> 2*G*J flips each way
+    _, m0, _, did0 = fn(jnp.asarray(4))
+    assert bool(did0)
+    assert int((np.asarray(mask) & ~np.asarray(m0)).sum()) == 2 * g * 4
+    # event 1 at step 9: k=1
+    _, m1, _, did1 = fn(jnp.asarray(9))
+    assert bool(did1)
+    assert int((np.asarray(mask) & ~np.asarray(m1)).sum()) == 1 * g * 4
+    # event 2 at step 14: k decayed to 0 -> mask unchanged (still an event)
+    _, m2, _, did2 = fn(jnp.asarray(14))
+    assert bool(did2)
+    np.testing.assert_array_equal(np.asarray(m2), np.asarray(mask))
+    # off-cycle: identity
+    _, m3, _, did3 = fn(jnp.asarray(7))
+    assert not bool(did3)
+    np.testing.assert_array_equal(np.asarray(m3), np.asarray(mask))
+    assert bool(sp.check_unit_mask(m0, spec))
+    assert bool(sp.check_unit_mask(m1, spec))
+
+
+def test_run_sample_honors_schedule():
+    """End-to-end: the jitted train step's DSST epochs follow the decay
+    schedule through the traced sample index."""
+    cfg = SNNConfig(n_in=32, n_hidden=32, n_layers=1, n_out=8, t_steps=8,
+                    dsst=dsst.DSSTConfig(period=2, prune_frac=0.5,
+                                         frac_decay=0.5))
+    spec = cfg.spec(32)
+    assert cfg.dsst.k_levels(spec) == ((0, 1), (1, 0))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    state = init_state(cfg, 2)
+    ev = jnp.asarray((np.random.default_rng(0).random((8, 2, 32)) < 0.4)
+                     .astype(np.float32))
+    fn = jax.jit(lambda p, s: run_sample(p, s, ev, None, cfg))
+
+    masks = [np.asarray(params["hidden"]["mask"])]
+    for _ in range(6):
+        params, state, _ = fn(params, state)
+        masks.append(np.asarray(params["hidden"]["mask"]))
+        assert topology.check(params["hidden"]["mask"], cfg)
+    # sample 1 closes event 0 (k=1): mask changed
+    assert (masks[2] != masks[1]).any()
+    # sample 3 closes event 1 (k decayed to 0): mask identical
+    np.testing.assert_array_equal(masks[4], masks[3])
+    np.testing.assert_array_equal(masks[6], masks[5])
+
+
+def test_init_stream_deltas_match_topology_width():
+    """The delta tensor the projection operates on matches the dense mask
+    expansion — shape contract between serving and topology."""
+    dl = init_stream_deltas(CFG, 4)
+    dm = topology.dense_masks(_params()["hidden"]["mask"], CFG)
+    assert dl.shape[1:] == dm.shape

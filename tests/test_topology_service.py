@@ -1,0 +1,257 @@
+"""Live topology evolution under serving traffic (serving/topology_service).
+
+The acceptance properties of the DSST-under-traffic tentpole:
+
+* a fleet with the service attached completes prune/regrow epochs under
+  live traffic with exactly ONE chunk-step compilation;
+* a serve trajectory across topology swaps is bit-identical to a
+  drain-and-restart reference (the same chunks driven through ``run_chunk``
+  by hand, with the same evolve applied offline between chunk calls);
+* surviving connections keep their delta bits across every swap, and the
+  exactly-N-per-group invariant holds after every epoch;
+* hot-stream folding promotes a lane's delta into the shared base without
+  changing that lane's effective weights (merge_weight=1.0), via the
+  generic (future-key-preserving) ``merge_lane_into_base``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.dsst import DSSTConfig
+from repro.core.snn import (SNNConfig, init_params, init_stream_deltas,
+                            init_stream_state)
+from repro.serving import (AdaptConfig, FleetTelemetry, ReplaySource,
+                           StreamScheduler, StreamSession, TopologyService,
+                           TopologyServiceConfig, make_chunk_fn,
+                           merge_lane_into_base)
+
+CFG = SNNConfig(n_in=32, n_hidden=32, n_layers=2, n_out=8, t_steps=12,
+                dsst=DSSTConfig(period=4, prune_frac=0.5))
+CHUNK = 6
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _events(seed, t, rate=0.3):
+    rng = np.random.default_rng(seed)
+    return (rng.random((t, CFG.n_in)) < rate).astype(np.float32)
+
+
+# --------------------------------------------------------------- lifecycle
+
+def test_epochs_complete_under_traffic_one_compile(params):
+    svc = TopologyService(CFG, TopologyServiceConfig(epoch_every=3,
+                                                     merge_top=1))
+    sched = StreamScheduler(params, CFG, n_slots=2, chunk_len=CHUNK,
+                            topology=svc)
+    for sid in range(2):
+        sched.submit(StreamSession(
+            sid=sid, source=ReplaySource(_events(sid, 9 * CHUNK),
+                                         chunk_len=CHUNK)))
+    done = sched.run_until_drained()
+    assert len(done) == 2
+    assert svc.epoch_idx >= 2, "no topology epochs ran under traffic"
+    assert sched.n_compiles == 1, "topology swap recompiled the chunk step"
+    # connectivity actually churned, and the invariant held every epoch
+    # (svc.evolve asserts it; re-check the final state from outside)
+    assert sum(e.pruned for e in svc.events) > 0
+    assert topology.check(sched.params["hidden"]["mask"], CFG)
+    # the evolved base no longer equals the boot params
+    assert (np.asarray(sched.params["hidden"]["mask"])
+            != np.asarray(params["hidden"]["mask"])).any()
+    # telemetry mirrored the service's event log
+    r = sched.telemetry.rollup()
+    assert r["topology_epochs"] == len(svc.events)
+    assert r["topology_pruned"] == sum(e.pruned for e in svc.events)
+    assert r["streams_merged"] == sum(len(e.merged_slots) for e in svc.events)
+    # streams kept producing predictions across the swaps
+    for s in done:
+        assert len(s.predictions) == 9 * CHUNK // CFG.t_steps
+
+
+def test_swap_matches_drain_and_restart_reference(params):
+    """Scheduler with live swaps == hand-driven run_chunk with the same
+    evolve applied offline between chunk calls: deltas, carried state and
+    every window prediction agree BIT-exactly."""
+    n_streams, n_steps = 2, 9
+    evs = [_events(10 + s, n_steps * CHUNK, rate=0.3 + 0.05 * s)
+           for s in range(n_streams)]
+    svc_cfg = TopologyServiceConfig(epoch_every=3, merge_top=1)
+
+    # ---- live: scheduler + service, swaps under traffic
+    svc = TopologyService(CFG, svc_cfg)
+    sched = StreamScheduler(params, CFG, n_slots=n_streams, chunk_len=CHUNK,
+                            topology=svc)
+    for sid in range(n_streams):
+        sched.submit(StreamSession(
+            sid=sid, source=ReplaySource(evs[sid], chunk_len=CHUNK)))
+    done = {s.sid: s for s in sched.run_until_drained()}
+    assert svc.epoch_idx >= 2 and sched.n_compiles == 1
+
+    # ---- reference: drain-and-restart — drive the same chunks through
+    # run_chunk directly; at each epoch boundary stop, apply the evolve
+    # offline (fresh service instance, same config), and continue from the
+    # carried state with the swapped (params, deltas)
+    ref_svc = TopologyService(CFG, svc_cfg)
+    fn = make_chunk_fn(CFG, AdaptConfig())
+    p = params
+    st = init_stream_state(CFG, n_streams)
+    dl = init_stream_deltas(CFG, n_streams)
+    amask = np.ones(n_streams, bool)
+    ref_preds = {s: [] for s in range(n_streams)}
+    for i in range(n_steps):
+        events = np.zeros((CHUNK, n_streams, CFG.n_in), np.float32)
+        valid = np.zeros((CHUNK, n_streams), bool)
+        for s in range(n_streams):
+            events[:, s] = evs[s][i * CHUNK:(i + 1) * CHUNK]
+            valid[:, s] = True
+        dl, st, m = fn(p, dl, st, events, jnp.asarray(valid), amask)
+        m = jax.device_get(m)
+        for s in range(n_streams):
+            for t in np.nonzero(m.window_end[:, s])[0]:
+                ref_preds[s].append(m.logits[t, s].copy())
+        ref_svc.observe(m)
+        grid_step = i + 1
+        # sessions retire before the evolve on their final step
+        active = tuple(s for s in range(n_streams)
+                       if (i + 1) * CHUNK < evs[s].shape[0])
+        if ref_svc.due(grid_step):
+            p, dl, _ = ref_svc.evolve(p, dl, merge_slots=active,
+                                      grid_step=grid_step)
+
+    # identical epoch history
+    assert [e.pruned for e in ref_svc.events] == \
+        [e.pruned for e in svc.events]
+    assert [e.merged_slots for e in ref_svc.events] == \
+        [e.merged_slots for e in svc.events]
+    # bit-identical params, deltas, predictions
+    for a, b in zip(jax.tree_util.tree_leaves(sched.params),
+                    jax.tree_util.tree_leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(sched.deltas), np.asarray(dl))
+    for sid in range(n_streams):
+        got = done[sid].predictions
+        assert len(got) == len(ref_preds[sid]) > 0
+        for a, b in zip(got, ref_preds[sid]):
+            np.testing.assert_array_equal(a.logits, b)
+
+
+def test_deltas_bit_exact_across_swap(params):
+    """Service-level pin of the projection property: one evolve on live
+    accumulated factors keeps surviving delta bits and zeroes the rest."""
+    svc = TopologyService(CFG, TopologyServiceConfig(epoch_every=1))
+    fn = make_chunk_fn(CFG, AdaptConfig())
+    st = init_stream_state(CFG, 2)
+    dl = init_stream_deltas(CFG, 2)
+    ev = _events(21, CFG.t_steps)[:, None, :].repeat(2, 1)
+    valid = jnp.ones((CFG.t_steps, 2), bool)
+    dl, st, m = fn(params, dl, st, ev, valid, np.ones(2, bool))
+    svc.observe(jax.device_get(m))
+    assert float(jnp.abs(dl).max()) > 0, "no adaptation accumulated"
+
+    old_mask = params["hidden"]["mask"]
+    p2, dl2, event = svc.evolve(params, dl, grid_step=1)
+    assert event.pruned > 0
+    surv = np.asarray(topology.survivors_dense(
+        old_mask, p2["hidden"]["mask"], CFG))
+    np.testing.assert_array_equal(np.asarray(dl2)[:, surv],
+                                  np.asarray(dl)[:, surv])
+    assert np.all(np.asarray(dl2)[:, ~surv] == 0.0)
+
+
+def test_frozen_config_never_evolves(params):
+    """Serve honors the same connectivity freeze as train: dsst_enabled off,
+    the dense baseline, and the RigL-style stop_step cool-down all make the
+    service inert (and evolve() fails fast instead of churning anyway)."""
+    import dataclasses
+    for frozen_cfg in (
+            dataclasses.replace(CFG, dsst_enabled=False),
+            dataclasses.replace(CFG, dense=True),
+            dataclasses.replace(CFG, dsst=DSSTConfig(
+                period=4, prune_frac=0.5, stop_step=0))):
+        svc = TopologyService(frozen_cfg, TopologyServiceConfig(epoch_every=1))
+        svc.observed_steps = 100.0
+        assert svc.frozen and not svc.due(10)
+        with pytest.raises(ValueError, match="frozen"):
+            svc.evolve(params, init_stream_deltas(frozen_cfg, 2), grid_step=1)
+    # a live config crosses stop_step mid-serve: epochs stop there
+    cfg = dataclasses.replace(CFG, dsst=DSSTConfig(
+        period=4, prune_frac=0.5, stop_step=5))
+    svc = TopologyService(cfg, TopologyServiceConfig(epoch_every=1))
+    assert not svc.frozen                      # epoch 0: virtual step 0
+    svc.epoch_idx = 2                          # virtual step 8 >= stop_step
+    assert svc.frozen and not svc.due(100)
+
+
+def test_no_epoch_without_traffic(params):
+    """An idle fleet must not churn its topology on all-zero scores."""
+    svc = TopologyService(CFG, TopologyServiceConfig(epoch_every=1))
+    sched = StreamScheduler(params, CFG, n_slots=2, chunk_len=CHUNK,
+                            topology=svc)
+    for _ in range(3):
+        sched.step()       # no sessions: all slots idle
+    assert svc.epoch_idx == 0 and svc.events == []
+    np.testing.assert_array_equal(np.asarray(sched.params["hidden"]["mask"]),
+                                  np.asarray(params["hidden"]["mask"]))
+
+
+# --------------------------------------------------------------- folding
+
+def test_fold_hot_stream_exact_and_generic(params):
+    """merge_weight=1: the hot lane's delta moves into the base and its
+    lane delta zeroes — the lane's effective weights are unchanged bits.
+    With prune_frac rounding k to 0 the epoch's mask is untouched, so the
+    fold is isolated. merge_lane_into_base preserves unknown params keys."""
+    cfg = SNNConfig(n_in=32, n_hidden=32, n_layers=2, n_out=8, t_steps=12,
+                    dsst=DSSTConfig(period=4, prune_frac=0.01))  # k = 0
+    p = init_params(jax.random.PRNGKey(1), cfg)
+    svc = TopologyService(cfg, TopologyServiceConfig(epoch_every=1,
+                                                     merge_top=1))
+    fn = make_chunk_fn(cfg, AdaptConfig())
+    st = init_stream_state(cfg, 2)
+    dl = init_stream_deltas(cfg, 2)
+    ev = _events(31, cfg.t_steps, rate=0.4)[:, None, :].repeat(2, 1)
+    dl, st, m = fn(p, dl, st, ev, jnp.ones((cfg.t_steps, 2), bool),
+                   np.array([True, False]))      # lane 1 frozen: delta 0
+    svc.observe(jax.device_get(m))
+    assert float(jnp.abs(dl[0]).max()) > 0
+
+    masks_f = np.asarray(topology.dense_masks(p["hidden"]["mask"], cfg))
+    want_w = np.asarray(p["hidden"]["w"]) + np.asarray(dl[0]) * masks_f
+    p2, dl2, event = svc.evolve(p, dl, merge_slots=(0,), grid_step=1)
+    assert event.merged_slots == (0,) and event.pruned == 0
+    np.testing.assert_array_equal(np.asarray(p2["hidden"]["mask"]),
+                                  np.asarray(p["hidden"]["mask"]))
+    np.testing.assert_allclose(np.asarray(p2["hidden"]["w"]), want_w,
+                               atol=0, rtol=0)
+    assert np.all(np.asarray(dl2[0]) == 0.0)     # promoted, lane reset
+
+    # generic pytree update: future keys survive the merge (regression for
+    # the hand-rolled dict rebuild that silently dropped them)
+    fat = {**p, "aux_head": jnp.ones(3),
+           "hidden": {**p["hidden"], "scales": jnp.ones(2)}}
+    out = merge_lane_into_base(fat, dl, 0, cfg)
+    assert "aux_head" in out and "scales" in out["hidden"]
+
+
+# --------------------------------------------------------------- telemetry
+
+def test_topology_telemetry_unit():
+    tel = FleetTelemetry()
+    assert tel.rollup()["topology_epochs"] == 0
+    tel.record_topology_epoch(grid_step=10, pruned=24, regrown=24,
+                              mask_change=0.125, merged_streams=2)
+    tel.record_topology_epoch(grid_step=20, pruned=12, regrown=12,
+                              mask_change=0.0625, merged_streams=0)
+    r = tel.topology_rollup()
+    assert r["topology_epochs"] == 2
+    assert r["topology_pruned"] == 36 and r["topology_regrown"] == 36
+    assert r["streams_merged"] == 2
+    np.testing.assert_allclose(r["topology_mask_change_mean"], 0.09375)
+    # the fleet rollup carries the same keys
+    assert tel.rollup()["topology_epochs"] == 2
