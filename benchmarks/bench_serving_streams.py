@@ -22,6 +22,16 @@ count and mask-change fraction — the cost of evolving connectivity under
 traffic. The hard guarantee extends: topology swaps included, the grid
 step still compiles exactly once. A quick with/without pair also runs as
 part of the default ``run()`` so the harness tracks it.
+
+``--pipeline on|off`` / ``--factors on|off`` A/B the serving hot path
+against the serial baseline (pipeline off, DSST factors compiled in):
+double-buffered event staging overlaps host chunk packing with device
+compute, and ``want_factors=off`` compiles the O(S·(K+N))-per-timestep
+DSST factor accumulators out of the chunk scan. Rows report events/s for
+the baseline and the configured mode plus their ratio; trajectories are
+bit-identical across all four combinations (pinned in
+``tests/test_serving_pipeline.py``). A quick A/B pair also rides in the
+default ``run()`` rows.
 """
 from __future__ import annotations
 
@@ -42,9 +52,15 @@ from repro.serving import (ArrivalConfig, FleetTelemetry, StreamScheduler,
 N_IN, N_HIDDEN, T_STEPS = 64, 64, 20
 CHUNK_LEN = 10
 
+# printed by ``benchmarks.run --dryrun`` so the module's focused CLI modes
+# are discoverable (and their registration can't rot silently)
+CLI_FLAGS = ("--devices N | --evolve EVERY | --pipeline on|off "
+             "| --factors on|off")
+
 
 def _drive(n_streams: int, n_slots: int, n_windows: int, seed: int = 0,
-           mesh=None, evolve_every: int = 0, merge_top: int = 2):
+           mesh=None, evolve_every: int = 0, merge_top: int = 2,
+           pipeline: int = 0, want_factors=None):
     cfg = SNNConfig(n_in=N_IN, n_hidden=N_HIDDEN, n_layers=2, n_out=10,
                     t_steps=T_STEPS)
     params = init_params(jax.random.PRNGKey(seed), cfg)
@@ -54,7 +70,8 @@ def _drive(n_streams: int, n_slots: int, n_windows: int, seed: int = 0,
         topo = TopologyService(cfg, TopologyServiceConfig(
             epoch_every=evolve_every, merge_top=merge_top))
     sched = StreamScheduler(params, cfg, n_slots=n_slots, chunk_len=CHUNK_LEN,
-                            mesh=mesh, topology=topo)
+                            mesh=mesh, topology=topo, pipeline_depth=pipeline,
+                            want_factors=want_factors)
     arrival = ArrivalConfig(min_chunk=4, max_chunk=CHUNK_LEN, mean_gap_s=1e-4)
     for sid in range(n_streams):
         sched.submit(StreamSession(
@@ -62,6 +79,7 @@ def _drive(n_streams: int, n_slots: int, n_windows: int, seed: int = 0,
             source=TaskStreamSource(task, n_windows=n_windows, seed=sid,
                                     arrival=arrival)))
     sched.step()                     # warmup step compiles the grid
+    sched.flush()                    # ...and lands its bookkeeping (pipeline)
     compiles_after_warmup = sched.n_compiles
     # measured window excludes warmup on both sides of the rate: fresh
     # telemetry drops the warmup step's latency AND its counted events
@@ -98,7 +116,44 @@ def run(quick: bool = True):
                         f" compiles={sched.n_compiles}"),
         })
     rows += run_evolve(quick=quick, frozen=frozen_baseline)
+    rows += run_ab(quick=quick)
     return rows
+
+
+# ---------------------------------------------------------------------------
+# --pipeline / --factors: hot-path A/B vs the serial baseline
+# ---------------------------------------------------------------------------
+
+def run_ab(quick: bool = True, pipeline: bool = True, factors: bool = False):
+    """Baseline (serial staging, DSST factors compiled in) vs the configured
+    hot path on the same workload. ``rel`` >= 1.0 means the configured mode
+    is at least as fast; the pipelined/factor-free path must not regress
+    (per-stream trajectories are bit-identical either way — only *when*
+    host work happens changes, never what the device computes)."""
+    n_streams, n_slots, n_windows = (8, 8, 2) if quick else (32, 32, 4)
+    base = _drive(n_streams, n_slots, n_windows, pipeline=0,
+                  want_factors=True)
+    # (pipeline=off, factors=on) IS the baseline — don't drive the same
+    # config twice just to print a noise-around-1.0 ratio
+    conf = base if (not pipeline and factors) else _drive(
+        n_streams, n_slots, n_windows,
+        pipeline=1 if pipeline else 0, want_factors=factors)
+    rb = base.telemetry.rollup()
+    rc = conf.telemetry.rollup()
+    rel = rc["events_per_s"] / rb["events_per_s"] \
+        if rb["events_per_s"] else 0.0
+    tag = (f"pipe{'on' if pipeline else 'off'}_"
+           f"fac{'on' if factors else 'off'}")
+    return [{
+        "name": f"serving/hotpath_{tag}_streams{n_streams}",
+        "us_per_call": rc["p50_ms"] * 1e3,
+        "derived": (f"events/s={rc['events_per_s']:.0f}"
+                    f" baseline_events/s={rb['events_per_s']:.0f}"
+                    f" rel={rel:.2f}"
+                    f" p99_ms={rc['p99_ms']:.2f}"
+                    f" baseline_p99_ms={rb['p99_ms']:.2f}"
+                    f" compiles={conf.n_compiles}"),
+    }]
 
 
 # ---------------------------------------------------------------------------
@@ -208,6 +263,12 @@ if __name__ == "__main__":
     ap.add_argument("--evolve", type=int, default=0, metavar="EVERY",
                     help="live topology epochs every EVERY grid steps, "
                          "vs a frozen-topology baseline")
+    ap.add_argument("--pipeline", choices=["on", "off"], default=None,
+                    help="A/B the double-buffered staging pipeline against "
+                         "the serial baseline")
+    ap.add_argument("--factors", choices=["on", "off"], default=None,
+                    help="A/B compiling the DSST factor accumulators out of "
+                         "the chunk scan (off) vs in (on)")
     ap.add_argument("--_child", type=int, default=0, help=argparse.SUPPRESS)
     args = ap.parse_args()
     if args._child:
@@ -219,6 +280,14 @@ if __name__ == "__main__":
     elif args.evolve:
         print("name,us_per_call,derived")
         for row in run_evolve(quick=False, every=args.evolve):
+            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+    elif args.pipeline is not None or args.factors is not None:
+        print("name,us_per_call,derived")
+        # unspecified halves stay at the baseline setting, so each flag can
+        # be A/B'd in isolation or combined (--pipeline on --factors off)
+        for row in run_ab(quick=False,
+                          pipeline=(args.pipeline == "on"),
+                          factors=(args.factors != "off")):
             print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
     else:
         for row in run(quick=True):

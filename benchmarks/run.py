@@ -10,8 +10,9 @@
   fig7  — five tasks: accuracy + modeled µW vs paper numbers, + depth sweep
   table1— memory cut / NCE / headline ratios
   serving — concurrent event-stream serving: throughput/latency/energy,
-            incl. live-topology-evolution vs frozen baseline (the module's
-            --evolve CLI runs the focused sweep)
+            incl. live-topology-evolution vs frozen baseline and the
+            hot-path A/B (the module's --evolve / --pipeline / --factors
+            CLI modes run the focused sweeps; --dryrun lists them)
   backend — engine backend seam: ref vs pallas-interpret step + parity
   roofline — per-(arch×shape×mesh) terms from dry-run artifacts (if present)
 
@@ -54,7 +55,11 @@ def main() -> None:
                if not callable(getattr(m, "run", None))]
         for k in sorted(modules):
             status = "BROKEN" if k in bad else "REGISTERED"
-            print(f"{k},0.00,{status}")
+            # modules with focused CLI modes advertise them (CLI_FLAGS) so
+            # the dryrun doubles as the flag index — e.g. serving lists its
+            # --devices / --evolve / --pipeline / --factors A/B sweeps
+            flags = getattr(modules[k], "CLI_FLAGS", "")
+            print(f"{k},0.00,{status}" + (f" {flags}" if flags else ""))
         if bad:
             sys.exit(1)
         return

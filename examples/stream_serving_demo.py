@@ -7,7 +7,9 @@ OSSL delta absorbs an update, and telemetry prices each stream at the
 chip's 0.6 V operating point.  A ``TopologyService`` keeps DSST alive
 under this traffic: every 10 grid steps the hottest stream's adaptation is
 folded into the shared base and a prune/regrow epoch evolves the N:M
-topology — with zero recompilation of the chunk step.
+topology — with zero recompilation of the chunk step.  The scheduler runs
+with ``pipeline_depth=1``: host event staging for step t+1 overlaps the
+device compute of step t (bit-identical results to the serial path).
 
     PYTHONPATH=src python examples/stream_serving_demo.py
 """
@@ -29,7 +31,7 @@ def main():
                                                       merge_top=1))
     sched = StreamScheduler(params, cfg, n_slots=4, chunk_len=8,
                             adapt=AdaptConfig(delta_clip=0.5),
-                            topology=topo)
+                            topology=topo, pipeline_depth=1)
     arrival = ArrivalConfig(min_chunk=4, max_chunk=10, mean_gap_s=0.003)
     for sid in range(8):
         sched.submit(StreamSession(

@@ -113,6 +113,9 @@ class Geometry(NamedTuple):
 
 
 def geometry(cfg) -> Geometry:
+    """Static layer-stack geometry: per-layer fan-ins, the zero-padded
+    stack width ``k_max = max(fanins)``, and whether all layers share one
+    fan-in (which unlocks the vmapped/kernel fast paths)."""
     fanins = tuple(cfg.layer_fanins)
     k_max = max(fanins)
     uniform = len(set(fanins)) == 1
@@ -186,6 +189,8 @@ class Backend:
 
 
 def make_backend(cfg) -> Backend:
+    """Resolve ``cfg.backend`` ("ref" | "pallas" | "pallas-interpret") to
+    the engine's static :class:`Backend` dispatch record."""
     name = getattr(cfg, "backend", "ref")
     if name == "ref":
         return Backend("ref", False, False, False)
@@ -254,6 +259,8 @@ def fwd_current(backend: Backend, pre, w_l, delta_l):
 
 
 def lif(backend: Backend, cfg, v, tr, current):
+    """One fused LIF step (``lif_step`` semantics) through the backend
+    seam; ``v``/``tr``/``current`` are ``[R, N]``. Returns (v', tr', s)."""
     if backend.use_kernels:
         from repro.kernels.lif import ops as lif_ops
         return lif_ops.lif_step(v, tr, current, alpha=cfg.alpha,
@@ -321,8 +328,8 @@ class LayerOut(NamedTuple):
 
 
 def _layer_timestep(cfg, backend: Backend, geo: Geometry, learn: bool,
-                    serving: bool, t_pc: int, t_wu: int, t_row, valid,
-                    carry: LayerCarry, xs: LayerSlice
+                    serving: bool, factors: bool, t_pc: int, t_wu: int,
+                    t_row, valid, carry: LayerCarry, xs: LayerSlice
                     ) -> Tuple[LayerCarry, LayerOut]:
     """SI + gated WU for ONE layer at ONE timestep — training and serving.
 
@@ -331,6 +338,11 @@ def _layer_timestep(cfg, backend: Backend, geo: Geometry, learn: bool,
     update lands in the base weights with the batch-mean scale ``lr/R``, and
     ``t_row`` is the sample-global timestep broadcast to every row. Serving
     keeps every quantity per-slot and masks invalid slots to exact no-ops.
+
+    ``factors`` (serving only) selects whether the per-slot DSST activity
+    magnitudes (``pre_mag``/``post_mag``) are emitted at all. A non-evolving
+    fleet passes False and the O(S·(K+N))-per-timestep factor arithmetic
+    never enters the trace — it is compiled out, not just skipped.
     """
     g = cfg.gating
     st, pre, pre_tr = xs.st, carry.pre_spikes, carry.pre_trace
@@ -360,12 +372,15 @@ def _layer_timestep(cfg, backend: Backend, geo: Geometry, learn: bool,
         dw = scale * pre_tr[:, :, None] * mod[:, None, :]
         delta_new = xs.delta + dw * xs.mask_f[None]
         w_new, opened_new, offered_new = xs.w, None, None
-        # DSST factors for the live topology service: per-slot activity
-        # magnitudes, zero on invalid timesteps (slot axis survives — the
-        # slot-separability contract extends to topology telemetry)
-        valf = valid.astype(tr.dtype)[:, None]
-        pre_mag = jnp.abs(pre_tr) * valf
-        post_mag = jnp.abs(mod) * valf
+        if factors:
+            # DSST factors for the live topology service: per-slot activity
+            # magnitudes, zero on invalid timesteps (slot axis survives — the
+            # slot-separability contract extends to topology telemetry)
+            valf = valid.astype(tr.dtype)[:, None]
+            pre_mag = jnp.abs(pre_tr) * valf
+            post_mag = jnp.abs(mod) * valf
+        else:
+            pre_mag = post_mag = None   # frozen fleet: factors compiled out
     else:
         scale = jnp.where(wu_on, cfg.lr / pre.shape[0], 0.0)
         w_new = train_wu(backend, cfg, xs.w, pre_tr, mod, scale, xs.mask_f)
@@ -429,7 +444,7 @@ def scan_sample(wrep, masks_f, readout, layers: LayerState, x_tr, gate,
     geo = geometry(cfg)
     t_pc, t_wu = _windows(cfg)
     fan, dens = _layer_arrays(cfg)
-    body = partial(_layer_timestep, cfg, backend, geo, learn, False,
+    body = partial(_layer_timestep, cfg, backend, geo, learn, False, False,
                    t_pc, t_wu)
 
     def ts(carry, inp):
@@ -465,24 +480,30 @@ def scan_sample(wrep, masks_f, readout, layers: LayerState, x_tr, gate,
 
 def scan_chunk(wrep, masks_f, readout, deltas, layers: LayerState, x_tr,
                ss_mean, t_win, samp, events, valid, cfg, backend: Backend,
-               learn: bool):
+               learn: bool, want_factors: bool = True):
     """Up to C timesteps of S independent streams (serving datapath).
 
     Engine layout: layer axis leading on ``layers``/``deltas``/``ss_mean``
     (``[L, S, ...]``); the public slot-leading layout is transposed at the
-    ``run_chunk`` boundary. Returns (deltas', state pieces, outs). The carry
-    also accumulates per-slot DSST activity factors (``acc_pre [L, S, Kmax]``,
-    ``acc_post [L, S, N]``) over the chunk — the raw material the serving
-    topology service turns into live prune/regrow epochs.
+    ``run_chunk`` boundary. Returns (deltas', state pieces, outs).
+
+    With ``want_factors`` (static bool) the carry also accumulates per-slot
+    DSST activity factors (``acc_pre [L, S, Kmax]``, ``acc_post [L, S, N]``)
+    over the chunk — the raw material the serving topology service turns
+    into live prune/regrow epochs. ``want_factors=False`` removes the two
+    accumulators from the scan carry entirely (no factor leaf appears in
+    the jaxpr — pinned by ``tests/test_serving_pipeline.py``): a fleet with
+    a frozen topology pays zero in-scan cost for machinery it never reads,
+    mirroring how the chip gates its learning datapath off when inactive.
     """
     geo = geometry(cfg)
     t_pc, t_wu = _windows(cfg)
     fan, dens = _layer_arrays(cfg)
     body = partial(_layer_timestep, cfg, backend, geo, learn, True,
-                   t_pc, t_wu)
+                   want_factors, t_pc, t_wu)
 
     def ts(carry, inp):
-        layers, x_tr, ss_mean, t_w, samp, dls, acc_pre, acc_post = carry
+        layers, x_tr, ss_mean, t_w, samp, dls, *acc = carry
         x, val = inp["x"], inp["v"]
         valf = val.astype(x.dtype)[:, None]
         x = x * valf
@@ -518,31 +539,58 @@ def scan_chunk(wrep, masks_f, readout, deltas, layers: LayerState, x_tr,
                                     (1, cfg.n_layers)),
                    loss=lc.loss / cfg.n_layers,
                    steps=val.astype(jnp.float32))
+        new_acc = (acc[0] + ys.pre_mag, acc[1] + ys.post_mag) if acc else ()
         return (rolled, x_tr, ys.ss_mean, t_w, samp, ys.delta,
-                acc_pre + ys.pre_mag, acc_post + ys.post_mag), out
+                *new_acc), out
 
     S = events.shape[1]
-    acc_pre0 = jnp.zeros((cfg.n_layers, S, geo.k_max))
-    acc_post0 = jnp.zeros((cfg.n_layers, S, cfg.n_hidden))
-    carry0 = (layers, x_tr, ss_mean, t_win, samp, deltas, acc_pre0, acc_post0)
+    acc0 = ()
+    if want_factors:
+        acc0 = (jnp.zeros((cfg.n_layers, S, geo.k_max)),
+                jnp.zeros((cfg.n_layers, S, cfg.n_hidden)))
+    carry0 = (layers, x_tr, ss_mean, t_win, samp, deltas, *acc0)
     carry, outs = jax.lax.scan(ts, carry0, {"x": events, "v": valid})
-    _assert_slot_separable(carry, outs, events.shape[0], events.shape[1], cfg)
+    _assert_slot_separable(carry, outs, events.shape[0], events.shape[1], cfg,
+                           want_factors)
     return carry, outs
 
 
-def _assert_slot_separable(carry, outs, C: int, S: int, cfg) -> None:
+def ordered_slot_sum(x: jax.Array) -> jax.Array:
+    """Reduce the leading slot axis with a shape-fixed binary halving tree.
+
+    ``x``: any ``[S, ...]`` array; returns ``x.sum(0)`` computed as
+    ``(x[:S//2] + x[S//2:2*(S//2)])`` recursively (odd tails ride along one
+    level). Every level is a plain elementwise add of two halves, so the
+    floating-point association order is a function of ``S`` alone — NOT of
+    the device count, sharding, or XLA's reduction strategy. This is what
+    lets the serving layer move the DSST-factor slot reduction onto the
+    device (one tiny ``[L, ·]`` transfer instead of ``[S, L, ·]`` per grid
+    step) while keeping the 1-device and slot-sharded fleets' topology
+    epoch decisions bit-identical — a bare ``x.sum(0)`` would not.
+    """
+    while x.shape[0] > 1:
+        half = x.shape[0] // 2
+        paired = x[:half] + x[half:2 * half]
+        x = paired if x.shape[0] % 2 == 0 else \
+            jnp.concatenate([paired, x[2 * half:]], axis=0)
+    return x[0]
+
+
+def _assert_slot_separable(carry, outs, C: int, S: int, cfg,
+                           want_factors: bool) -> None:
     """The chunk step's zero-collective contract: every per-stream quantity
     keeps its slot axis through the scan. A reduction over slots — which
     would silently break the slot-axis ``shard_map`` in serving/adapt.py —
     shows up at trace time as a dropped ``S`` dimension here."""
-    layers, x_tr, ss_mean, t_w, samp, dls, acc_pre, acc_post = carry
+    layers, x_tr, ss_mean, t_w, samp, dls, *acc = carry
     for leaf in jax.tree_util.tree_leaves(layers):
         assert leaf.shape[:2] == (cfg.n_layers, S), leaf.shape
     assert x_tr.shape[0] == S, x_tr.shape
     assert ss_mean.shape == (cfg.n_layers, S), ss_mean.shape
     assert t_w.shape == (S,) and samp.shape == (S,), (t_w.shape, samp.shape)
     assert dls.shape[:2] == (cfg.n_layers, S), dls.shape
-    assert acc_pre.shape[:2] == (cfg.n_layers, S), acc_pre.shape
-    assert acc_post.shape[:2] == (cfg.n_layers, S), acc_post.shape
+    assert len(acc) == (2 if want_factors else 0), len(acc)
+    for a in acc:
+        assert a.shape[:2] == (cfg.n_layers, S), a.shape
     for name, leaf in outs.items():
         assert leaf.shape[:2] == (C, S), (name, leaf.shape)

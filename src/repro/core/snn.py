@@ -312,6 +312,16 @@ def init_stream_deltas(cfg: SNNConfig, n_slots: int) -> jax.Array:
 
 
 class ChunkMetrics(NamedTuple):
+    """Per-chunk serving metrics; every per-stream leaf keeps its slot axis.
+
+    The two DSST factor fields are ``None`` when the chunk ran with
+    ``want_factors=False`` (frozen-topology fleets — the accumulators are
+    compiled out of the scan, see ``engine.scan_chunk``). Out of
+    :func:`run_chunk` they are per-slot ``[S, L, ·]``; the serving layer
+    (``serving/adapt.make_chunk_fn``) slot-reduces them on device with the
+    order-fixed ``engine.ordered_slot_sum`` before they leave the jit, so
+    callers of the jitted chunk fn see ``[L, Kmax]`` / ``[L, N]`` instead.
+    """
     logits: jax.Array          # [C, S, n_out] per-timestep readout
     window_end: jax.Array      # [C, S] bool: logits here close a T-window
     sop_forward: jax.Array     # [S]
@@ -321,8 +331,10 @@ class ChunkMetrics(NamedTuple):
     gate_offered: jax.Array    # [S, L]
     local_loss: jax.Array      # [S] summed OSSL loss over late TSs
     steps: jax.Array           # [S] valid timesteps processed
-    pre_mag: jax.Array         # [S, L, Kmax] summed |pre trace| (DSST factor)
-    post_mag: jax.Array        # [S, L, N] summed |OSSL modulator| (DSST factor)
+    pre_mag: Optional[jax.Array]   # [S, L, Kmax] summed |pre trace|
+    #   (DSST factor; [L, Kmax] past the serving chunk fn; None when off)
+    post_mag: Optional[jax.Array]  # [S, L, N] summed |OSSL modulator|
+    #   (DSST factor; [L, N] past the serving chunk fn; None when off)
 
 
 def _to_engine(tree):
@@ -339,23 +351,35 @@ def run_chunk(
     cfg: SNNConfig,
     *,
     learn: bool = True,
+    want_factors: bool = True,
 ) -> Tuple[jax.Array, StreamState, ChunkMetrics]:
     """Advance S independent streams by up to C timesteps each.
 
-    Resumes from carried ``state``; base ``params`` are frozen, adaptation
-    accumulates in per-stream ``deltas``.
+    Args:
+      params:  frozen shared base — stacked ``hidden/{w,mask}`` + readout.
+      deltas:  per-stream adaptation ``[S, L, Kmax, n_hidden]`` (slot-leading).
+      state:   carried :class:`StreamState` (slot-leading leaves).
+      events:  ``[C, S, n_in]`` binary spikes.
+      valid:   ``[C, S]`` bool — ragged chunks / idle slots are exact no-ops.
+      learn:   gate the per-stream OSSL delta updates on/off.
+      want_factors: static; False compiles the DSST ``pre_mag``/``post_mag``
+        accumulators out of the chunk scan and returns them as ``None`` —
+        the right mode for fleets whose topology never evolves.
+
+    Returns ``(deltas', state', metrics)``: same shapes/dtypes in and out,
+    so the caller can jit once and stream forever.
     """
     backend = engine.make_backend(cfg)
     masks = params["hidden"]["mask"]
     masks_f = engine.dense_masks(masks, cfg)
     wrep = engine.prepare_weights(params["hidden"]["w"], masks, cfg, backend)
 
-    (layers, x_tr, ss_mean, t_win, samp, dls, acc_pre, acc_post), outs = \
+    (layers, x_tr, ss_mean, t_win, samp, dls, *accs), outs = \
         engine.scan_chunk(
             wrep, masks_f, params["readout"], _to_engine(deltas),
             _to_engine(state.layers), state.x_tr, state.ss_mean.T,
             state.t_in_window, state.sample_idx, events, valid, cfg, backend,
-            learn)
+            learn, want_factors)
 
     new_state = StreamState(layers=_to_engine(layers), x_tr=x_tr,
                             ss_mean=ss_mean.T, t_in_window=t_win,
@@ -370,8 +394,8 @@ def run_chunk(
         gate_offered=outs["offered"].sum(0),
         local_loss=outs["loss"].sum(0),
         steps=outs["steps"].sum(0),
-        pre_mag=_to_engine(acc_pre),
-        post_mag=_to_engine(acc_post),
+        pre_mag=_to_engine(accs[0]) if accs else None,
+        post_mag=_to_engine(accs[1]) if accs else None,
     )
     # slot-separability contract (backs the slot-axis shard_map in serving):
     # metric reductions run over time only — the S axis survives everywhere
@@ -383,9 +407,13 @@ def run_chunk(
         assert leaf.shape == (S,), leaf.shape
     assert metrics.gate_opened.shape == metrics.gate_offered.shape \
         == (S, cfg.n_layers), metrics.gate_opened.shape
-    assert metrics.pre_mag.shape[:2] == (S, cfg.n_layers), metrics.pre_mag.shape
-    assert metrics.post_mag.shape == (S, cfg.n_layers, cfg.n_hidden), \
-        metrics.post_mag.shape
+    if want_factors:
+        assert metrics.pre_mag.shape[:2] == (S, cfg.n_layers), \
+            metrics.pre_mag.shape
+        assert metrics.post_mag.shape == (S, cfg.n_layers, cfg.n_hidden), \
+            metrics.post_mag.shape
+    else:
+        assert metrics.pre_mag is None and metrics.post_mag is None
     return _to_engine(dls), new_state, metrics
 
 

@@ -266,7 +266,7 @@ def stream_shardings(tree: Any, mesh: Mesh) -> Any:
     return jax.tree_util.tree_map(lambda _: slot_sharding(mesh), tree)
 
 
-def chunk_step_specs() -> Tuple[Tuple, Tuple]:
+def chunk_step_specs(want_factors: bool = True) -> Tuple[Tuple, Tuple]:
     """shard_map specs for ``fn(params, deltas, state, events, valid,
     adapt_mask) -> (deltas, state, metrics)``.
 
@@ -275,21 +275,42 @@ def chunk_step_specs() -> Tuple[Tuple, Tuple]:
     per-field specs because ``logits``/``window_end`` carry the slot axis
     second. Zero collectives inside the step — each device advances only
     its slot shard.
+
+    ``want_factors`` mirrors the static flag on ``make_chunk_fn``: when
+    False the metrics carry no DSST factor leaves (``pre_mag``/``post_mag``
+    are None) and the spec tree matches; when True the factors leave the
+    shard-mapped step per-slot (``[S, L, ·]`` — the slot reduction happens
+    *outside* shard_map, see ``chunk_step_shardings``).
     """
     from repro.core.snn import ChunkMetrics
     s0, s1 = slot_spec(0), slot_spec(1)
+    fac = s0 if want_factors else None
     metrics = ChunkMetrics(
         logits=s1, window_end=s1, sop_forward=s0, sop_wu=s0,
         sop_wu_offered=s0, gate_opened=s0, gate_offered=s0,
-        local_loss=s0, steps=s0, pre_mag=s0, post_mag=s0)
+        local_loss=s0, steps=s0, pre_mag=fac, post_mag=fac)
     in_specs = (P(), s0, s0, s1, s1, s0)
     out_specs = (s0, s0, metrics)
     return in_specs, out_specs
 
 
-def chunk_step_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
-    """The same specs as NamedShardings (jit in/out placement)."""
-    in_specs, out_specs = chunk_step_specs()
+def chunk_step_shardings(mesh: Mesh,
+                         want_factors: bool = True) -> Tuple[Tuple, Tuple]:
+    """The chunk-fn jit's in/out NamedShardings.
+
+    Mostly ``chunk_step_specs`` as shardings, with one deliberate
+    difference: the jitted chunk fn slot-reduces the DSST factors with the
+    order-fixed ``engine.ordered_slot_sum`` *after* the shard-mapped step,
+    so by the time they are jit outputs they have no slot axis — they
+    replicate (``P()``), ``[L, Kmax]`` / ``[L, N]`` and a few KB per grid
+    step instead of an ``[S, L, ·]`` device→host transfer.
+    """
+    in_specs, out_specs = chunk_step_specs(want_factors)
     as_sh = lambda tree: jax.tree_util.tree_map(
         lambda p: NamedSharding(mesh, p), tree)
-    return as_sh(in_specs), as_sh(out_specs)
+    in_sh, out_sh = as_sh(in_specs), as_sh(out_specs)
+    if want_factors:
+        rep = replicated(mesh)
+        out_sh = (out_sh[0], out_sh[1],
+                  out_sh[2]._replace(pre_mag=rep, post_mag=rep))
+    return in_sh, out_sh

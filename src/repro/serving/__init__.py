@@ -1,22 +1,25 @@
 """Event-stream serving runtime.
 
 Stateful SNN sessions, slot-multiplexed micro-batching over one jitted
-chunk step, per-stream gated OSSL adaptation on a frozen shared base, and
-per-stream/fleet energy telemetry. See README "Serving" and the modules'
-docstrings for the architecture.
+chunk step with double-buffered event staging, per-stream gated OSSL
+adaptation on a frozen shared base, live DSST topology evolution, and
+per-stream/fleet energy telemetry. See ``docs/ARCHITECTURE.md`` /
+``docs/SERVING.md`` and the modules' docstrings for the architecture.
 """
 from .adapt import AdaptConfig, delta_norms, make_chunk_fn, merge_lane_into_base
 from .scheduler import StreamScheduler
 from .session import (SessionStatus, StreamSession, WindowPrediction,
                       fresh_lane_state, read_lane, reset_lane, write_lane)
+from .staging import InFlight, LaneRecord, StagedChunk, StagingPipeline
 from .stream_source import ArrivalConfig, ReplaySource, TaskStreamSource
 from .telemetry import FleetTelemetry, StreamCounters
 from .topology_service import (TopologyEpochEvent, TopologyService,
                                TopologyServiceConfig)
 
 __all__ = [
-    "AdaptConfig", "ArrivalConfig", "FleetTelemetry", "ReplaySource",
-    "SessionStatus", "StreamCounters", "StreamScheduler", "StreamSession",
+    "AdaptConfig", "ArrivalConfig", "FleetTelemetry", "InFlight",
+    "LaneRecord", "ReplaySource", "SessionStatus", "StagedChunk",
+    "StagingPipeline", "StreamCounters", "StreamScheduler", "StreamSession",
     "TaskStreamSource", "TopologyEpochEvent", "TopologyService",
     "TopologyServiceConfig", "WindowPrediction", "delta_norms",
     "fresh_lane_state", "make_chunk_fn", "merge_lane_into_base", "read_lane",

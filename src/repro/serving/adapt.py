@@ -1,8 +1,9 @@
 """Per-stream online OSSL adaptation under serving load.
 
 Parameter layout: a **frozen shared base** (the trained weights every
-stream serves from) plus a **per-stream delta** tensor per hidden layer,
-``[n_slots, fan_in, n_hidden]``. Each slot's effective weights are
+stream serves from) plus ONE stacked **per-stream delta** tensor,
+``[n_slots, n_layers, Kmax, n_hidden]`` (slot axis leading, layer axis
+stacked — the engine layout since PR 2). Each slot's effective weights are
 ``w_base + delta[slot]``; the activity-dependent gating engine (per-stream
 IA/SS thresholds inside ``core.snn.run_chunk``) decides when a stream's
 delta absorbs a three-factor OSSL update. A silent or repetitive stream
@@ -51,7 +52,8 @@ class AdaptConfig:
 
 
 def make_chunk_fn(cfg: SNNConfig, adapt: AdaptConfig | None = None,
-                  mesh: Optional[jax.sharding.Mesh] = None):
+                  mesh: Optional[jax.sharding.Mesh] = None,
+                  want_factors: bool = True):
     """Build the jitted slot-grid step.
 
     Returns ``fn(params, deltas, state, events, valid, adapt_mask)`` ->
@@ -66,6 +68,20 @@ def make_chunk_fn(cfg: SNNConfig, adapt: AdaptConfig | None = None,
     Each device advances only its slot shard — no collectives — so the
     result is bit-identical to the single-device path. S must divide by the
     mesh's device count (``launch.sharding.check_slot_divisible``).
+
+    ``want_factors`` (static) controls the DSST activity factors the live
+    topology service consumes:
+
+    * ``True`` (default) — the engine accumulates per-slot ``pre_mag``/
+      ``post_mag`` over the chunk and this wrapper slot-reduces them **on
+      device** with the order-fixed ``engine.ordered_slot_sum`` before they
+      leave the jit: the metrics carry ``[L, Kmax]`` / ``[L, N]`` (a few
+      KB) instead of a per-step ``[S, L, ·]`` device→host transfer, and the
+      fixed reduction tree keeps 1-device and slot-sharded fleets'
+      epoch decisions bit-identical.
+    * ``False`` — the accumulators are compiled out of the chunk scan
+      entirely (``metrics.pre_mag is None``); the O(S·(K+N))-per-timestep
+      in-scan cost disappears. Use for fleets with a frozen topology.
     """
     adapt = adapt or AdaptConfig()
     scfg = cfg if adapt.lr_scale == 1.0 else dataclasses.replace(
@@ -75,7 +91,8 @@ def make_chunk_fn(cfg: SNNConfig, adapt: AdaptConfig | None = None,
     def step(params, deltas, state: StreamState, events, valid, adapt_mask
              ) -> Tuple[jax.Array, StreamState, ChunkMetrics]:
         new_deltas, new_state, metrics = run_chunk(
-            params, deltas, state, events, valid, scfg, learn=adapt.enabled)
+            params, deltas, state, events, valid, scfg, learn=adapt.enabled,
+            want_factors=want_factors)
         d = new_deltas                           # [S, L, Kmax, N]
         if adapt.delta_decay < 1.0:
             d = d * adapt.delta_decay
@@ -100,10 +117,10 @@ def make_chunk_fn(cfg: SNNConfig, adapt: AdaptConfig | None = None,
     else:
         from jax.experimental.shard_map import shard_map
         from repro.launch import sharding as SH
-        in_specs, out_specs = SH.chunk_step_specs()
+        in_specs, out_specs = SH.chunk_step_specs(want_factors)
         body = shard_map(step, mesh=mesh, in_specs=in_specs,
                          out_specs=out_specs, check_rep=False)
-        in_sh, out_sh = SH.chunk_step_shardings(mesh)
+        in_sh, out_sh = SH.chunk_step_shardings(mesh, want_factors)
         jit_kw = {"in_shardings": in_sh, "out_shardings": out_sh}
         validate = lambda n_slots: SH.check_slot_divisible(n_slots, mesh)
 
@@ -111,10 +128,20 @@ def make_chunk_fn(cfg: SNNConfig, adapt: AdaptConfig | None = None,
     def chunk_fn(params, deltas, state, events, valid, adapt_mask):
         traces["n"] += 1
         validate(events.shape[1])   # trace-time: clean error, not XLA's
-        return body(params, deltas, state, events, valid, adapt_mask)
+        deltas, state, metrics = body(params, deltas, state, events, valid,
+                                      adapt_mask)
+        if want_factors:
+            # order-fixed slot reduction OUTSIDE the shard-mapped step (the
+            # step itself stays collective-free) but still on device: the
+            # topology service fetches O(L·(K+N)), not O(S·L·(K+N))
+            metrics = metrics._replace(
+                pre_mag=engine.ordered_slot_sum(metrics.pre_mag),
+                post_mag=engine.ordered_slot_sum(metrics.post_mag))
+        return deltas, state, metrics
 
     chunk_fn.n_traces = lambda: traces["n"]
     chunk_fn.mesh = mesh
+    chunk_fn.want_factors = want_factors
     return chunk_fn
 
 

@@ -9,16 +9,29 @@ place), retired streams free it. Idle or ragged tails are masked invalid,
 so they neither perturb state nor accrue telemetry: an empty slot costs
 exactly zero counted events.
 
-Per step:
+Each grid step runs through three explicit phases (see serving/staging.py):
 
-1. advance the virtual clock and poll every session's source for newly
-   arrived chunks (Poisson arrivals → ragged per-slot backlogs);
-2. admit queued sessions into free lanes;
-3. pack up to ``chunk_len`` buffered timesteps per active slot, run the
-   single compiled chunk fn (zero recompilation after warmup — checked in
-   the benchmark);
-4. route window-end logits back to sessions as predictions, fold per-lane
-   metrics into per-stream telemetry, retire exhausted streams.
+1. **stage** — advance the virtual clock, poll every session's source for
+   newly arrived chunks (Poisson arrivals → ragged per-slot backlogs),
+   admit queued sessions into free lanes, pack up to ``chunk_len``
+   buffered timesteps per active slot, and mark sessions that exhaust
+   after this step;
+2. **dispatch** — enqueue the single compiled chunk fn on the staged
+   buffers (asynchronous — the host does not wait) and free the lanes of
+   marked sessions so the next stage phase can re-admit into them;
+3. **retire** — fetch the step's metrics (the only device wait), route
+   window-end logits back to sessions as predictions, fold per-lane
+   metrics into per-stream telemetry, finalize retiring sessions, and
+   feed/drive the topology service.
+
+With ``pipeline_depth=0`` (default) the phases run back-to-back — the
+serial reference behavior. With ``pipeline_depth=1`` the scheduler
+double-buffers: step ``t+1`` is staged while the device computes step
+``t``, hiding host event assembly behind compute; lane surgery and
+telemetry reads no longer force a device sync per step. Both modes
+produce bit-identical per-stream trajectories (pinned in
+``tests/test_serving_pipeline.py``) — call :meth:`flush` (or use
+:meth:`run_until_drained`, which does) to drain in-flight bookkeeping.
 
 With a ``("slots",)`` mesh (``launch.mesh.make_serving_mesh``) the grid
 shards over devices: slot allocation pads to the device count, the chunk
@@ -26,12 +39,15 @@ step runs under slot-axis ``shard_map`` (bit-identical to 1-device — see
 serving/adapt.py), and lane surgery re-places its result so the slot
 sharding survives admit/retire.
 
-With a ``TopologyService`` attached, every step also feeds the service's
-DSST accumulators and ``maybe_evolve_topology()`` runs due prune/regrow
-epochs *between* grid steps: the evolved ``(params, deltas)`` keep their
-shapes and slot shardings, so the swap is atomic from the streams' point
-of view and the chunk step never recompiles (see
-serving/topology_service.py).
+With a ``TopologyService`` attached, the chunk fn is built with
+``want_factors=True``: every retire phase feeds the service's DSST
+accumulators (slot-reduced on device — a few-KB transfer) and
+``maybe_evolve_topology()`` runs due prune/regrow epochs *between* grid
+steps: the evolved ``(params, deltas)`` keep their shapes and slot
+shardings, so the swap is atomic from the streams' point of view and the
+chunk step never recompiles (see serving/topology_service.py). Without a
+service, ``want_factors=False`` compiles the factor accumulators out of
+the chunk scan entirely — a frozen fleet pays nothing for them.
 """
 from __future__ import annotations
 
@@ -48,15 +64,40 @@ from repro.launch.batching import SlotGrid
 from .adapt import AdaptConfig, make_chunk_fn
 from .session import (SessionStatus, StreamSession, WindowPrediction,
                       reset_lane)
+from .staging import InFlight, LaneRecord, StagedChunk, StagingPipeline
 from .telemetry import FleetTelemetry
 
 
 class StreamScheduler:
+    """Drives a fleet of :class:`StreamSession`\\ s over one slot grid.
+
+    Args:
+      params:   frozen shared base params (stacked layout, ``core.snn``).
+      cfg:      the fleet's :class:`SNNConfig`.
+      n_slots:  grid width (rounded up / floored per device with ``mesh``).
+      chunk_len: timesteps per grid step (static chunk-fn shape).
+      adapt:    per-stream delta hygiene (:class:`AdaptConfig`).
+      clock_dt_s: virtual seconds per grid step (drives source arrivals).
+      telemetry: a :class:`FleetTelemetry` to fill (fresh one by default).
+      mesh:     optional 1-D ``("slots",)`` mesh — shard the grid.
+      topology: optional :class:`TopologyService` — live DSST epochs.
+      pipeline_depth: 0 = serial phases (reference), 1 = double-buffered
+        staging (overlap host packing with device compute), >1 = deeper
+        queue (clamped to 1 while a live topology service is attached, so
+        epochs land between the same grid steps as the serial path).
+      want_factors: override the chunk fn's static DSST-factor mode; by
+        default inferred — True iff a non-frozen topology service is
+        attached. Note the mode is baked at compile time: a service that
+        *becomes* frozen later stops paying the host transfer but keeps
+        the (tiny) in-scan accumulators until the scheduler is rebuilt.
+    """
+
     def __init__(self, params, cfg: SNNConfig, n_slots: int,
                  chunk_len: int = 8, adapt: Optional[AdaptConfig] = None,
                  clock_dt_s: float = 0.002,
                  telemetry: Optional[FleetTelemetry] = None,
-                 mesh=None, topology=None):
+                 mesh=None, topology=None, pipeline_depth: int = 0,
+                 want_factors: Optional[bool] = None):
         self.params, self.cfg = params, cfg
         self.mesh = mesh
         self.topology = topology          # Optional[TopologyService]
@@ -64,6 +105,20 @@ class StreamScheduler:
             # fail here, not at the first epoch with a half-evolved fleet
             raise ValueError("topology service was built for a different "
                              "SNNConfig than this scheduler's")
+        live_topology = topology is not None and not topology.frozen
+        if want_factors is None:
+            want_factors = live_topology
+        if live_topology and not want_factors:
+            raise ValueError(
+                "a live topology service consumes the chunk step's DSST "
+                "factors; want_factors=False would starve it — drop the "
+                "service or keep factors on")
+        self.want_factors = want_factors
+        if topology is not None:
+            # an epoch due after step t must land before step t+1 is
+            # dispatched; depth 1 preserves that, deeper queues would not
+            pipeline_depth = min(pipeline_depth, 1)
+        self.pipeline = StagingPipeline(depth=pipeline_depth)
         if mesh is not None:
             # device-count-aware slot allocation: the grid is padded to a
             # multiple of the slot-mesh size so every device owns an equal
@@ -84,12 +139,14 @@ class StreamScheduler:
             self._delta_sh = sharding.slot_sharding(mesh)
             self.state = jax.device_put(self.state, self._state_sh)
             self.deltas = jax.device_put(self.deltas, self._delta_sh)
-        self.chunk_fn = make_chunk_fn(cfg, adapt, mesh=mesh)
+        self.chunk_fn = make_chunk_fn(cfg, adapt, mesh=mesh,
+                                      want_factors=want_factors)
         self.telemetry = telemetry or FleetTelemetry()
         self.retired: List[StreamSession] = []
 
     # -- lifecycle -----------------------------------------------------------
     def submit(self, session: StreamSession) -> None:
+        """Queue a session for admission at the next stage phase."""
         session.status = SessionStatus.QUEUED
         if session.n_in is None:
             session.n_in = self.cfg.n_in
@@ -122,15 +179,17 @@ class StreamScheduler:
                 for chunk in sess.source.poll(self.clock):
                     sess.push_events(chunk)
 
-    def _retire(self, slot: int) -> None:
-        sess = self.grid.occupant[slot]
-        sess.final_deltas = np.asarray(self.deltas[slot])   # [L, Kmax, N]
-        sess.status, sess.slot = SessionStatus.RETIRED, None
-        self.retired.append(self.grid.retire(slot))
+    # -- phase 1: stage ------------------------------------------------------
+    def _stage(self) -> StagedChunk:
+        """Host-only assembly of one grid step (no device interaction).
 
-    # -- the one grid step ---------------------------------------------------
-    def step(self) -> Dict[int, int]:
-        """One slot-grid step; returns {slot: timesteps fed}."""
+        Advances the clock, polls sources, admits into free lanes, packs
+        the event/valid/adapt-mask buffers, and records the step's
+        scheduling decisions: which lanes were fed what, which sessions
+        exhaust after this step, and which slots are epoch-merge eligible.
+        Runs while the previous step's device compute is in flight when
+        the pipeline is enabled — this is the overlapped phase.
+        """
         self.clock += self.clock_dt_s
         self._poll_sources()
         self._admit()
@@ -139,6 +198,8 @@ class StreamScheduler:
         events = np.zeros((C, S, self.cfg.n_in), np.float32)
         valid = np.zeros((C, S), bool)
         amask = np.zeros(S, bool)
+        lanes: List[LaneRecord] = []
+        retiring = []
         fed: Dict[int, int] = {}
         for slot, sess in enumerate(self.grid.occupant):
             if sess is None:
@@ -150,35 +211,49 @@ class StreamScheduler:
                 valid[:n, slot] = True
             amask[slot] = sess.adapt
             fed[slot] = n
+            lanes.append(LaneRecord(slot=slot, session=sess, n_fed=n,
+                                    events_in=float(chunk.sum())))
+            if sess.exhausted:        # a host fact: source done, buffer empty
+                retiring.append((slot, sess))
+        gone = {slot for slot, _ in retiring}
+        merge_slots = tuple(
+            slot for slot, sess in enumerate(self.grid.occupant)
+            if sess is not None and sess.adapt and slot not in gone)
+        return StagedChunk(events=events, valid=valid, adapt_mask=amask,
+                           lanes=lanes, retiring=retiring,
+                           merge_slots=merge_slots, fed=fed)
 
-        t0 = time.perf_counter()
-        self.deltas, self.state, m = self.chunk_fn(
-            self.params, self.deltas, self.state, events, valid, amask)
-        jax.block_until_ready(m.logits)
-        self.telemetry.record_step(time.perf_counter() - t0)
+    # -- phase 2: dispatch ---------------------------------------------------
+    def _dispatch(self, staged: StagedChunk) -> InFlight:
+        """Enqueue the chunk fn on the staged buffers — asynchronous, no
+        host wait — then free retiring sessions' lanes so the *next* stage
+        phase can re-admit into them (same admission timing as the serial
+        path, where retire frees lanes before the next step's admits)."""
+        self.deltas, self.state, metrics = self.chunk_fn(
+            self.params, self.deltas, self.state, staged.events,
+            staged.valid, staged.adapt_mask)
         self.grid.tick()
+        for slot, _ in staged.retiring:
+            self.grid.retire(slot)
+        return InFlight(staged=staged, deltas=self.deltas, metrics=metrics,
+                        grid_step=self.grid.stats["steps"])
 
-        want_factors = self.topology is not None and not self.topology.frozen
-        if not want_factors:
-            # only a live topology service consumes the DSST factors — don't
-            # pay their device->host transfer (a frozen service included).
-            # When wanted they cross per-slot, NOT pre-summed on device: the
-            # service's host-side np reduction is what keeps the 1-device
-            # and sharded fleets' epoch decisions bit-identical (an XLA /
-            # cross-device reduction order may differ from np's).
-            m = m._replace(pre_mag=None, post_mag=None)
-        m = jax.device_get(m)                  # one transfer for all metrics
+    # -- phase 3: retire -----------------------------------------------------
+    def _retire(self, fl: InFlight) -> None:
+        """Consume one in-flight step: fetch metrics (the only device
+        wait), route predictions, fold telemetry, finalize retiring
+        sessions from the captured handles, drive the topology service."""
+        m = jax.device_get(fl.metrics)         # one transfer for all metrics
+        staged = fl.staged
         logits = m.logits                      # [C, S, n_out]
         wend = m.window_end                    # [C, S]
-        for slot, sess in enumerate(self.grid.occupant):
-            if sess is None:
-                continue
-            n = fed[slot]
-            sess.timesteps_fed += n
+        for rec in staged.lanes:
+            slot, sess = rec.slot, rec.session
+            sess.timesteps_fed += rec.n_fed
             counters = self.telemetry.stream(sess.sid)
             counters.add_chunk(
                 steps=float(m.steps[slot]),
-                events_in=float(events[:, slot].sum()),
+                events_in=rec.events_in,
                 sop_forward=float(m.sop_forward[slot]),
                 sop_wu=float(m.sop_wu[slot]),
                 sop_wu_offered=float(m.sop_wu_offered[slot]),
@@ -190,30 +265,72 @@ class StreamScheduler:
                 sess.predictions.append(WindowPrediction(
                     window_idx=len(sess.predictions),
                     logits=logits[t, slot].copy()))
-            if sess.exhausted:
-                self._retire(slot)
-        if want_factors:
-            self.topology.observe(m)
-            self.maybe_evolve_topology()
-        return fed
+        for slot, sess in staged.retiring:
+            # the captured post-step handle, NOT self.deltas: a later stage
+            # phase may already have re-admitted into this lane
+            sess.final_deltas = np.asarray(fl.deltas[slot])  # [L, Kmax, N]
+            sess.status, sess.slot = SessionStatus.RETIRED, None
+            self.retired.append(sess)
+        svc = self.topology
+        if svc is not None and not svc.frozen and m.pre_mag is not None:
+            svc.observe(m)
+            self.maybe_evolve_topology(merge_slots=staged.merge_slots,
+                                       grid_step=fl.grid_step)
+
+    # -- the one grid step ---------------------------------------------------
+    def step(self) -> Dict[int, int]:
+        """One slot-grid step; returns {slot: timesteps fed} for the step
+        staged (and dispatched) by this call.
+
+        Serial mode (``pipeline_depth=0``): stage → dispatch → retire, all
+        within this call. Pipelined: stage this step (overlapping the
+        in-flight device compute), retire the oldest in-flight step if the
+        pipeline is full, then dispatch — bookkeeping for the staged step
+        lands one ``step()`` later (or at :meth:`flush`).
+        """
+        t0 = time.perf_counter()
+        staged = self._stage()
+        if self.pipeline.depth == 0:
+            self._retire(self._dispatch(staged))
+        else:
+            while self.pipeline.full:
+                self._retire(self.pipeline.pop())
+            self.pipeline.push(self._dispatch(staged))
+        self.telemetry.record_step(time.perf_counter() - t0)
+        return staged.fed
+
+    def flush(self) -> None:
+        """Retire every in-flight step (no-op in serial mode). Call after
+        the last ``step()`` — predictions, telemetry, final-delta
+        snapshots and due topology epochs of in-flight steps land here."""
+        while len(self.pipeline):
+            t0 = time.perf_counter()
+            self._retire(self.pipeline.pop())
+            self.telemetry.record_flush(time.perf_counter() - t0)
 
     # -- live topology evolution --------------------------------------------
-    def maybe_evolve_topology(self, force: bool = False):
+    def maybe_evolve_topology(self, force: bool = False, merge_slots=None,
+                              grid_step: Optional[int] = None):
         """Run a due DSST prune/regrow epoch between grid steps.
 
         The service returns ``(params, deltas)`` with identical shapes and
         slot shardings, so installing them is an atomic swap: active
         sessions keep their lanes and carried state, and the next grid step
         reuses the already-compiled chunk fn (``n_compiles`` stays 1).
-        Returns the ``TopologyEpochEvent`` when an epoch ran, else None.
+        The retire phase passes the staged step's ``merge_slots`` snapshot
+        and dispatch-time ``grid_step`` so a pipelined epoch sees exactly
+        the fleet the serial scheduler would; manual calls may omit both
+        (current occupants / current grid step). Returns the
+        ``TopologyEpochEvent`` when an epoch ran, else None.
         """
         svc = self.topology
-        step = self.grid.stats["steps"]
+        step = self.grid.stats["steps"] if grid_step is None else grid_step
         if svc is None or not (force or svc.due(step)):
             return None
-        merge_slots = tuple(
-            slot for slot, sess in enumerate(self.grid.occupant)
-            if sess is not None and sess.adapt)
+        if merge_slots is None:
+            merge_slots = tuple(
+                slot for slot, sess in enumerate(self.grid.occupant)
+                if sess is not None and sess.adapt)
         params, deltas, event = svc.evolve(
             self.params, self.deltas, merge_slots=merge_slots, grid_step=step)
         self.params = params
@@ -225,13 +342,22 @@ class StreamScheduler:
         return event
 
     def run_until_drained(self, max_steps: int = 100_000) -> List[StreamSession]:
+        """Step until every submitted session is served, then flush the
+        pipeline; returns the retired sessions (bookkeeping complete)."""
         while not self.grid.drained:
             self.step()
             if self.grid.stats["steps"] >= max_steps:
                 break
+        self.flush()
         return self.retired
 
     # -- introspection -------------------------------------------------------
+    @property
+    def drained(self) -> bool:
+        """True when no session is queued/active AND no step is in flight
+        (i.e. all bookkeeping has landed)."""
+        return self.grid.drained and len(self.pipeline) == 0
+
     @property
     def n_compiles(self) -> int:
         """Trace count of the slot-grid step (0 before warmup, must stay 1
@@ -241,4 +367,5 @@ class StreamScheduler:
 
     @property
     def utilization(self) -> float:
+        """Mean fraction of lanes occupied at dispatch, over all steps."""
         return self.grid.utilization

@@ -74,6 +74,7 @@ class StreamSession:
         self._pending.append(np.asarray(chunk, np.float32))
 
     def pending_timesteps(self) -> int:
+        """Buffered-but-unprocessed timesteps across all pending chunks."""
         return sum(c.shape[0] for c in self._pending)
 
     def pop_chunk(self, max_len: int) -> np.ndarray:
@@ -104,22 +105,28 @@ class StreamSession:
 # ---------------------------------------------------------------------------
 
 def write_lane(batched, single, slot: int):
-    """Write ``single`` (leading axis 1) into lane ``slot`` of ``batched``."""
+    """Write ``single`` (same pytree, leading axis 1) into lane ``slot`` of
+    the slot-leading ``batched`` pytree; every other lane's bits are
+    untouched. Returns the new pytree (leaves are fresh arrays —
+    ``.at[].set`` never mutates)."""
     return jax.tree_util.tree_map(
         lambda b, s: b.at[slot].set(s[0]), batched, single)
 
 
 def read_lane(batched, slot: int):
-    """Extract lane ``slot`` of every leaf, keeping a leading axis of 1."""
+    """Extract lane ``slot`` of every leaf of a slot-leading pytree,
+    keeping a leading axis of 1 (the shape ``write_lane`` expects back)."""
     return jax.tree_util.tree_map(lambda b: b[slot:slot + 1], batched)
 
 
 def fresh_lane_state(cfg: SNNConfig):
-    """A 1-slot initial (state, deltas) pair used to reset a claimed lane."""
+    """A 1-slot initial ``(StreamState, deltas [1, L, Kmax, N])`` pair used
+    to reset a claimed lane."""
     return init_stream_state(cfg, 1), init_stream_deltas(cfg, 1)
 
 
 def reset_lane(state, deltas, cfg: SNNConfig, slot: int):
-    """Return (state, deltas) with lane ``slot`` re-initialized in place."""
+    """Return ``(state, deltas)`` with lane ``slot`` re-initialized in
+    place (fresh traces, zero delta) — the admit-time lane surgery."""
     s1, d1 = fresh_lane_state(cfg)
     return write_lane(state, s1, slot), write_lane(deltas, d1, slot)

@@ -1,0 +1,131 @@
+"""Double-buffered event staging for the serving hot path.
+
+The grid step used to be strictly serial per step: pack host event buffers
+→ dispatch the jitted chunk fn → block on the device → fetch metrics →
+bookkeep.  Host packing and device compute each sat idle while the other
+ran.  This module is the pipelining half of the fix (the other half is the
+static ``want_factors`` seam in ``adapt.make_chunk_fn``): the scheduler's
+step is split into three explicit phases —
+
+* **stage**   — host-only: advance the virtual clock, poll sources, admit
+  queued sessions, pack the ``[C, S, n_in]`` event / ``[C, S]`` valid
+  buffers, and *decide* which sessions will exhaust after this step (a
+  pure host fact: source done + pending buffer drained).  Produces a
+  :class:`StagedChunk`.
+* **dispatch** — enqueue the chunk fn on the staged buffers and return
+  immediately (JAX dispatch is asynchronous); the device handles plus the
+  staged host record become an :class:`InFlight` step.
+* **retire**  — consume one in-flight step's results: fetch its metrics
+  (this is the only point that waits on the device), route window
+  predictions, fold telemetry, finalize retiring sessions from the
+  *captured* output handles, and feed/drive the topology service.
+
+With ``depth=0`` the three phases run back-to-back inside one ``step()``
+— bit-identical to the pre-pipeline scheduler.  With ``depth>=1``
+(:class:`StagingPipeline` holds the in-flight steps) the stage phase for
+grid step ``t+1`` runs **while the device computes step t**, exactly the
+way event-driven silicon (ElfCore's async SerDes front-end, ReckOn's
+spike buffers) hides I/O behind compute.  Because JAX arrays are
+immutable, the in-flight record's ``deltas``/``metrics`` handles are
+unaffected by the lane surgery later stages perform on the scheduler's
+live arrays, so deferred bookkeeping reads exactly the values the step
+produced — the pipeline changes *when* host work happens, never *what*
+the device computes.  Pipeline-on and pipeline-off trajectories are
+pinned bit-identical (1-device and 8-device) in
+``tests/test_serving_pipeline.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Dict, List, Tuple
+
+
+@dataclasses.dataclass
+class LaneRecord:
+    """What one occupied lane was fed this grid step (host-side facts that
+    the retire phase pairs with the device metrics)."""
+    slot: int
+    session: Any                 # StreamSession
+    n_fed: int                   # timesteps packed into the lane
+    events_in: float             # total input spikes packed (telemetry)
+
+
+@dataclasses.dataclass
+class StagedChunk:
+    """One grid step's host-assembled inputs + scheduling decisions.
+
+    ``events [C, S, n_in]`` / ``valid [C, S]`` / ``adapt_mask [S]`` are the
+    chunk fn's staging buffers.  ``retiring`` lists the ``(slot, session)``
+    pairs that exhaust after this step — known at stage time, finalized at
+    retire time.  ``merge_slots`` snapshots the adaptive occupants eligible
+    for a hot-stream fold should a topology epoch run after this step
+    (captured here so a pipelined retire sees the same candidate set the
+    serial scheduler would — admissions from *later* stage phases must not
+    leak into an earlier step's epoch).
+    """
+    events: Any                  # np.ndarray [C, S, n_in] f32
+    valid: Any                   # np.ndarray [C, S] bool
+    adapt_mask: Any              # np.ndarray [S] bool
+    lanes: List[LaneRecord]
+    retiring: List[Tuple[int, Any]]
+    merge_slots: Tuple[int, ...]
+    fed: Dict[int, int]          # {slot: timesteps fed} (step() return value)
+
+
+@dataclasses.dataclass
+class InFlight:
+    """A dispatched-but-unretired grid step: the staged host record plus
+    the chunk fn's (asynchronous) output handles.  ``deltas`` is captured
+    at dispatch, so retiring sessions snapshot their final adaptation even
+    if a later admit has already reset that lane on the live arrays."""
+    staged: StagedChunk
+    deltas: Any                  # [S, L, Kmax, N] device handle (post-step)
+    metrics: Any                 # ChunkMetrics device handles
+    grid_step: int               # grid.stats["steps"] after this step's tick
+
+
+class StagingPipeline:
+    """Bounded FIFO of in-flight grid steps (the double buffer).
+
+    ``depth`` is the number of dispatched steps that may be outstanding
+    before the scheduler must retire the oldest:
+
+    * ``0`` — synchronous: every step retires before ``step()`` returns
+      (the reference behavior; still runs through the same three phases).
+    * ``1`` — double buffering: step ``t+1`` is staged while step ``t``
+      computes.  The sweet spot: host packing is hidden, and a topology
+      epoch due after step ``t`` still lands before step ``t+1`` is
+      dispatched, which is what keeps evolving fleets bit-identical to
+      the synchronous path.
+    * ``>1`` — deeper queues additionally hide retire-phase host
+      bookkeeping, but defer an epoch past already-dispatched steps — the
+      scheduler therefore clamps depth to 1 when a live topology service
+      is attached.
+    """
+
+    def __init__(self, depth: int = 1):
+        if depth < 0:
+            raise ValueError(f"pipeline depth must be >= 0, got {depth}")
+        self.depth = depth
+        self._q: Deque[InFlight] = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def full(self) -> bool:
+        """True when a dispatch must be preceded by retiring the oldest."""
+        return len(self._q) >= max(self.depth, 1)
+
+    def push(self, fl: InFlight) -> None:
+        if self.depth == 0:
+            raise RuntimeError("synchronous pipeline (depth=0) cannot hold "
+                               "in-flight steps; retire immediately instead")
+        if self.full:
+            raise RuntimeError("staging pipeline full; retire first")
+        self._q.append(fl)
+
+    def pop(self) -> InFlight:
+        """Oldest in-flight step (FIFO — retire order is dispatch order)."""
+        return self._q.popleft()

@@ -41,9 +41,12 @@ class ReplaySource:
 
     @property
     def exhausted(self) -> bool:
+        """True once every replayed timestep has been released."""
         return self._cursor >= self._events.shape[0]
 
     def poll(self, now: float) -> List[np.ndarray]:
+        """Release the next ``chunk_len`` timesteps as one ``[c, n_in]``
+        chunk (ignores ``now`` — replay is clock-independent)."""
         if self.exhausted:
             return []
         end = min(self._cursor + self._chunk_len, self._events.shape[0])
@@ -77,10 +80,12 @@ class TaskStreamSource:
 
     @property
     def exhausted(self) -> bool:
+        """True once every pre-cut chunk has arrived and been polled."""
         return self._next >= len(self._chunks)
 
     @property
     def n_timesteps(self) -> int:
+        """Total timesteps this source will deliver over its lifetime."""
         return sum(c.shape[0] for _, c in self._chunks)
 
     def poll(self, now: float) -> List[np.ndarray]:

@@ -9,8 +9,8 @@ per-stream separable: a slot's counters only ever receive that slot's lane
 of the chunk metrics.
 
 ``FleetTelemetry`` also tracks host-side step latencies (the wall time of
-one jitted slot-grid step) for the p50/p99 numbers in the serving
-benchmark, and — when a ``TopologyService`` drives live DSST epochs — a
+one full ``StreamScheduler.step()`` — stage + dispatch + retire phases)
+for the p50/p99 numbers in the serving benchmark, and — when a ``TopologyService`` drives live DSST epochs — a
 log of topology events (per-epoch pruned/regrown counts, mask-change
 fraction, hot-stream merges) so an operator can see connectivity churn
 next to the energy counters it is supposed to pay for.
@@ -42,6 +42,9 @@ class StreamCounters:
     def add_chunk(self, *, steps, events_in, sop_forward, sop_wu,
                   sop_wu_offered, gate_opened, gate_offered, windows,
                   local_loss) -> None:
+        """Fold one grid step's slice of the chunk metrics into this
+        stream's counters (all non-negative scalars — monotonicity is by
+        construction, pinned in tests)."""
         self.timesteps += float(steps)
         self.events_in += float(events_in)
         self.sop_forward += float(sop_forward)
@@ -54,11 +57,16 @@ class StreamCounters:
 
     @property
     def wu_skip_rate(self) -> float:
+        """Fraction of offered WU MACs the activity gate skipped (0.0 when
+        nothing was offered — e.g. an adapt=False stream)."""
         if self.sop_wu_offered <= 0:
             return 0.0
         return 1.0 - self.sop_wu / self.sop_wu_offered
 
     def energy(self, op: Optional[OperatingPoint] = None) -> dict:
+        """This stream's counters priced at operating point ``op`` (the
+        chip's 0.6 V low-power point by default): the ``core.energy``
+        report dict + ``sid``/``timesteps``/``windows``."""
         rep = report(self.sop_forward, self.sop_wu, self.sop_wu_offered,
                      self.timesteps, op=op)
         out = rep.as_dict()
@@ -76,16 +84,29 @@ class FleetTelemetry:
         self.streams: Dict[int, StreamCounters] = {}
         self.step_latencies_s: List[float] = []
         self.steps = 0
+        self.flush_wall_s = 0.0
         self.topology_epochs: List[dict] = []
 
     def stream(self, sid: int) -> StreamCounters:
+        """The (created-on-first-use) per-stream counter record for ``sid``."""
         if sid not in self.streams:
             self.streams[sid] = StreamCounters(sid)
         return self.streams[sid]
 
     def record_step(self, latency_s: float) -> None:
+        """Log one grid step's host wall time (stage+dispatch+retire of a
+        ``StreamScheduler.step()`` call — under a staging pipeline the
+        retire inside belongs to an earlier step, but the *sum* over steps
+        still accounts every phase exactly once)."""
         self.steps += 1
         self.step_latencies_s.append(float(latency_s))
+
+    def record_flush(self, latency_s: float) -> None:
+        """Log pipeline-flush wall time (retiring in-flight steps after the
+        last grid step). Not a grid step — excluded from the latency
+        percentiles, but included in the throughput wall so pipelined
+        events/s never get a free final step."""
+        self.flush_wall_s += float(latency_s)
 
     def record_topology_epoch(self, *, grid_step: int, pruned: int,
                               regrown: int, mask_change: float,
@@ -98,6 +119,7 @@ class FleetTelemetry:
 
     # -- rollup --------------------------------------------------------------
     def latency_percentiles(self) -> dict:
+        """p50/p99 of recorded grid-step wall times, in milliseconds."""
         if not self.step_latencies_s:
             return {"p50_ms": 0.0, "p99_ms": 0.0}
         lat = np.asarray(self.step_latencies_s) * 1e3
@@ -105,6 +127,10 @@ class FleetTelemetry:
                 "p99_ms": float(np.percentile(lat, 99))}
 
     def rollup(self) -> dict:
+        """Fleet-level summary: summed stream counters, throughput rates
+        (events/s, timesteps/s over the recorded step + flush wall),
+        latency percentiles, fleet energy, and the topology rollup. See
+        docs/SERVING.md for the field glossary."""
         tot = StreamCounters(sid=-1)
         for c in self.streams.values():
             tot.add_chunk(steps=c.timesteps, events_in=c.events_in,
@@ -113,7 +139,7 @@ class FleetTelemetry:
                           gate_opened=c.gate_opened,
                           gate_offered=c.gate_offered, windows=c.windows,
                           local_loss=c.local_loss)
-        wall = sum(self.step_latencies_s)
+        wall = sum(self.step_latencies_s) + self.flush_wall_s
         out = {
             "n_streams": len(self.streams),
             "grid_steps": self.steps,
@@ -130,6 +156,8 @@ class FleetTelemetry:
         return out
 
     def topology_rollup(self) -> dict:
+        """Aggregate of the topology-epoch event log (counts, mask-change
+        mean, streams merged); all zeros for a frozen fleet."""
         ep = self.topology_epochs
         return {
             "topology_epochs": len(ep),
@@ -141,4 +169,6 @@ class FleetTelemetry:
         }
 
     def per_stream(self) -> List[dict]:
+        """Each stream's energy report (sid-sorted) at the fleet's
+        operating point."""
         return [c.energy(self.op) for _, c in sorted(self.streams.items())]

@@ -9,12 +9,15 @@ itself keeps evolving from live activity, without draining a single session.
 
 The cycle, driven by ``StreamScheduler.maybe_evolve_topology()``:
 
-1. **Accumulate** — every grid step the chunk metrics carry per-slot DSST
-   factors (``pre_mag [S, L, Kmax]`` = summed |pre trace|, ``post_mag
-   [S, L, N]`` = summed |OSSL modulator|; computed valid-masked inside the
-   engine scan).  :meth:`TopologyService.observe` folds them into one
-   decaying ``DSSTAccumulator`` per layer, stacked — O(K + N) per layer,
-   the chip's factorized write-back.
+1. **Accumulate** — every grid step the chunk metrics carry DSST factors
+   (summed |pre trace| and |OSSL modulator|, computed valid-masked and
+   per-slot inside the engine scan, then slot-reduced **on device** by the
+   jitted chunk fn with the order-fixed ``engine.ordered_slot_sum`` — the
+   host fetches ``pre_mag [L, Kmax]`` / ``post_mag [L, N]``, a few KB,
+   instead of a per-step ``[S, L, ·]`` transfer).
+   :meth:`TopologyService.observe` folds them into one decaying
+   ``DSSTAccumulator`` per layer, stacked — O(K + N) per layer, the chip's
+   factorized write-back.
 2. **Fold** — hot streams' adaptations are promoted into the shared base
    (``adapt.merge_lane_into_base``, the generic pytree update): the lanes
    with the largest delta norms among the active adaptive slots merge with
@@ -113,13 +116,24 @@ class TopologyService:
 
         ``metrics`` is the (host-fetched) ``ChunkMetrics`` of a chunk step;
         ``pre_mag``/``post_mag`` are valid-masked inside the engine, so idle
-        slots and ragged tails contribute exactly zero.  The slot reduction
-        happens HERE, on host with one fixed np summation order — that is
-        what keeps epoch decisions bit-identical between the 1-device and
-        slot-sharded fleets (a device-side reduction's order may not match).
+        slots and ragged tails contribute exactly zero.  The serving chunk
+        fn (``adapt.make_chunk_fn(want_factors=True)``) hands them over
+        already slot-reduced — ``[L, Kmax]`` / ``[L, N]`` — by the
+        order-fixed device-side ``engine.ordered_slot_sum``, whose fixed
+        reduction tree is what keeps epoch decisions bit-identical between
+        the 1-device and slot-sharded fleets (a bare ``.sum(0)``'s order
+        may not match across shardings).  Raw per-slot ``[S, L, ·]``
+        factors straight out of ``snn.run_chunk`` are also accepted and
+        reduced here on host (np's fixed sequential order).
         """
-        pre = np.asarray(metrics.pre_mag, np.float32).sum(0)   # [L, Kmax]
-        post = np.asarray(metrics.post_mag, np.float32).sum(0)  # [L, N]
+        if metrics.pre_mag is None:
+            raise ValueError(
+                "chunk metrics carry no DSST factors (want_factors=False); "
+                "a live topology service needs a factor-bearing chunk fn")
+        pre = np.asarray(metrics.pre_mag, np.float32)
+        post = np.asarray(metrics.post_mag, np.float32)
+        if pre.ndim == 3:                      # [S, L, ·]: raw run_chunk form
+            pre, post = pre.sum(0), post.sum(0)
         d = self.service.accum_decay
         self.pre *= d
         self.post *= d
