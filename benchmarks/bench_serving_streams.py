@@ -23,6 +23,13 @@ traffic. The hard guarantee extends: topology swaps included, the grid
 step still compiles exactly once. A quick with/without pair also runs as
 part of the default ``run()`` so the harness tracks it.
 
+Rows carry the observability signals next to throughput: the per-phase
+stage/dispatch/retire p50/p99 walls (``phase_ms=...``) and — for the
+pipelined A/B rows — the measured host/device **overlap ratio**
+(``overlap=``, ~1 host-bound / ~0 device-bound; docs/OBSERVABILITY.md).
+Under ``benchmarks.run --json`` each row additionally ships a structured
+``metrics`` dict and a full ``obs`` registry snapshot.
+
 ``--pipeline on|off`` / ``--factors on|off`` A/B the serving hot path
 against the serial baseline (pipeline off, DSST factors compiled in):
 double-buffered event staging overlaps host chunk packing with device
@@ -60,7 +67,7 @@ CLI_FLAGS = ("--devices N | --evolve EVERY | --pipeline on|off "
 
 def _drive(n_streams: int, n_slots: int, n_windows: int, seed: int = 0,
            mesh=None, evolve_every: int = 0, merge_top: int = 2,
-           pipeline: int = 0, want_factors=None):
+           pipeline: int = 0, want_factors=None, tracer=None):
     cfg = SNNConfig(n_in=N_IN, n_hidden=N_HIDDEN, n_layers=2, n_out=10,
                     t_steps=T_STEPS)
     params = init_params(jax.random.PRNGKey(seed), cfg)
@@ -71,7 +78,7 @@ def _drive(n_streams: int, n_slots: int, n_windows: int, seed: int = 0,
             epoch_every=evolve_every, merge_top=merge_top))
     sched = StreamScheduler(params, cfg, n_slots=n_slots, chunk_len=CHUNK_LEN,
                             mesh=mesh, topology=topo, pipeline_depth=pipeline,
-                            want_factors=want_factors)
+                            want_factors=want_factors, tracer=tracer)
     arrival = ArrivalConfig(min_chunk=4, max_chunk=CHUNK_LEN, mean_gap_s=1e-4)
     for sid in range(n_streams):
         sched.submit(StreamSession(
@@ -90,6 +97,36 @@ def _drive(n_streams: int, n_slots: int, n_windows: int, seed: int = 0,
     assert compiles_after_warmup == 1 and sched.n_compiles == 1, \
         f"slot-grid step recompiled: {sched.n_compiles} variants"
     return sched
+
+
+def _phase_str(tel) -> str:
+    """Compact per-phase p50/p99 for the derived column, e.g.
+    ``phase_ms=stage:0.4/1.1,dispatch:0.2/0.5,retire:0.3/0.9``."""
+    ph = tel.phase_percentiles()
+    parts = [f"{p}:{d['p50_ms']:.2f}/{d['p99_ms']:.2f}"
+             for p, d in sorted(ph.items())]
+    return "phase_ms=" + ",".join(parts) if parts else "phase_ms=none"
+
+
+def _row_extras(sched) -> dict:
+    """Structured extras for the ``--json`` artifact: the obs-derived
+    numbers (overlap ratio, per-phase p50/p99) plus a full registry
+    snapshot of the run's metrics."""
+    tel = sched.telemetry
+    r = tel.rollup()
+    metrics = {
+        "events_per_s": r["events_per_s"],
+        "timesteps_per_s": r["timesteps_per_s"],
+        "p50_ms": r["p50_ms"], "p99_ms": r["p99_ms"],
+        "overlap_ratio": r["overlap_ratio"],
+        "grid_steps": r["grid_steps"],
+        "compiles": sched.n_compiles,
+    }
+    for phase, d in tel.phase_percentiles().items():
+        metrics[f"phase_{phase}_p50_ms"] = d["p50_ms"]
+        metrics[f"phase_{phase}_p99_ms"] = d["p99_ms"]
+        metrics[f"phase_{phase}_total_s"] = d["total_s"]
+    return {"metrics": metrics, "obs": tel.registry.snapshot()}
 
 
 def run(quick: bool = True):
@@ -113,7 +150,9 @@ def run(quick: bool = True):
                         f" util={sched.utilization:.2f}"
                         f" skip={r['wu_skip_rate']:.2f}"
                         f" stream_uW={mean_uw:.1f}"
+                        f" {_phase_str(sched.telemetry)}"
                         f" compiles={sched.n_compiles}"),
+            **_row_extras(sched),
         })
     rows += run_evolve(quick=quick, frozen=frozen_baseline)
     rows += run_ab(quick=quick)
@@ -150,9 +189,12 @@ def run_ab(quick: bool = True, pipeline: bool = True, factors: bool = False):
         "derived": (f"events/s={rc['events_per_s']:.0f}"
                     f" baseline_events/s={rb['events_per_s']:.0f}"
                     f" rel={rel:.2f}"
+                    f" overlap={rc['overlap_ratio']:.2f}"
                     f" p99_ms={rc['p99_ms']:.2f}"
                     f" baseline_p99_ms={rb['p99_ms']:.2f}"
+                    f" {_phase_str(conf.telemetry)}"
                     f" compiles={conf.n_compiles}"),
+        **_row_extras(conf),
     }]
 
 
@@ -196,6 +238,7 @@ def run_evolve(quick: bool = True, every: int = 0, frozen=None):
                     f" pruned={sum(e.pruned for e in svc.events)}"
                     f" merged={sum(len(e.merged_slots) for e in svc.events)}"
                     f" compiles={live.n_compiles}"),
+        **_row_extras(live),
     }]
 
 

@@ -1,7 +1,10 @@
 """Benchmark harness: one module per paper table/figure + the roofline.
 
 ``PYTHONPATH=src python -m benchmarks.run [--full]`` prints
-``name,us_per_call,derived`` CSV. Modules:
+``name,us_per_call,derived`` CSV. ``--json out.json`` additionally
+writes a machine-readable results artifact (schema below) so successive
+runs accumulate a benchmark trajectory instead of scrolling away.
+Modules:
 
   fig3  — async SerDes functional stand-in (packing/delay buffer)
   fig4  — OSSL ablations (PC/CC/depth/WU-locking)
@@ -22,8 +25,41 @@ callable — the CI smoke step that keeps registration from rotting.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
 import traceback
+
+ARTIFACT_SCHEMA = "repro-bench/1"
+
+
+def write_artifact(path: str, rows: list, *, failed: int = 0,
+                   argv=None) -> dict:
+    """Write the ``--json`` results artifact; returns the document.
+
+    Schema ``repro-bench/1``: top-level ``schema``/``created_unix_s``/
+    ``argv``/``failed`` plus ``rows`` — each row carries the CSV triple
+    (``name``, ``us_per_call``, ``derived``) verbatim and, when a module
+    attached them, structured extras: ``metrics`` (a flat dict of derived
+    numbers, e.g. the serving rows' overlap ratio and per-phase p50/p99)
+    and ``obs`` (a ``MetricsRegistry.snapshot()`` of the run).
+    """
+    doc = {
+        "schema": ARTIFACT_SCHEMA,
+        "created_unix_s": time.time(),
+        "argv": list(sys.argv if argv is None else argv),
+        "failed": int(failed),
+        "rows": [{
+            "name": r["name"],
+            "us_per_call": float(r["us_per_call"]),
+            "derived": str(r["derived"]),
+            **({"metrics": r["metrics"]} if "metrics" in r else {}),
+            **({"obs": r["obs"]} if "obs" in r else {}),
+        } for r in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    return doc
 
 
 def main() -> None:
@@ -32,6 +68,8 @@ def main() -> None:
     ap.add_argument("--only", default="", help="comma list of module names")
     ap.add_argument("--dryrun", action="store_true",
                     help="verify benchmark registration only (CI smoke)")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write a machine-readable results artifact")
     args = ap.parse_args()
     quick = not args.full
 
@@ -66,14 +104,22 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failed = 0
+    collected = []
     for key, mod in modules.items():
         try:
             for row in mod.run(quick=quick):
                 print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+                collected.append(row)
         except Exception:
             failed += 1
             print(f"{key},0.00,ERROR", file=sys.stdout)
             traceback.print_exc(file=sys.stderr)
+            collected.append({"name": key, "us_per_call": 0.0,
+                              "derived": "ERROR"})
+    if args.json:
+        # written even on partial failure (failed > 0 is recorded in the
+        # artifact) so a flaky module never costs the whole trajectory point
+        write_artifact(args.json, collected, failed=failed)
     if failed:
         sys.exit(1)
 

@@ -102,11 +102,22 @@ class Request:
 
 
 class ContinuousBatcher:
+    """Fixed-slot continuous batching over the jitted one-token decode.
+
+    ``tracer`` (an ``obs.trace.Tracer``; the no-op ``NULL_TRACER`` by
+    default) records ``batch.admit`` and ``batch.decode_step`` spans —
+    the latter tagged with how many slots were prefilling vs decoding, so
+    a Chrome trace shows prefill replay stealing decode steps. Spans wrap
+    host phases only: tracing never changes what the device computes.
+    """
+
     def __init__(self, params, cfg: ModelConfig, n_slots: int, max_seq: int,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, tracer=None):
+        from repro.obs.trace import NULL_TRACER
         self.params, self.cfg = params, cfg
         self.n_slots, self.max_seq = n_slots, max_seq
         self.eos_id = eos_id
+        self.tracer = tracer or NULL_TRACER
         self.cache = T.init_cache(cfg, n_slots, max_seq)
         # cache["pos"] is global; per-slot positions are ours
         self.grid: SlotGrid[Request] = SlotGrid(n_slots)
@@ -130,10 +141,12 @@ class ContinuousBatcher:
         their logits. Admission therefore replays prompts in lock-step too —
         simple and correct; per-slot position offsets are bookkept here.
         """
-        def on_admit(slot, req):
-            self.slot_pos[slot] = 0
-            req._fed = 0          # prompt tokens already fed
-        self.grid.admit(on_admit)
+        with self.tracer.span("batch.admit",
+                              grid_step=self.grid.stats["steps"] + 1) as sp:
+            def on_admit(slot, req):
+                self.slot_pos[slot] = 0
+                req._fed = 0          # prompt tokens already fed
+            sp.set(admitted=len(self.grid.admit(on_admit)))
 
     def _feed_tokens(self) -> np.ndarray:
         toks = np.zeros(self.n_slots, np.int32)
@@ -161,10 +174,17 @@ class ContinuousBatcher:
     def step(self, rng: Optional[jax.Array] = None):
         """One global decode step across all slots."""
         self._admit()
-        toks = self._feed_tokens()
-        logits, self.cache = self._step(self.params, self.cache,
-                                        jnp.asarray(toks))
-        nxt = np.asarray(jnp.argmax(logits, -1))
+        prefilling = sum(1 for r in self.grid.occupant
+                         if r is not None and r._fed < len(r.prompt))
+        decoding = len(self.grid.active_slots()) - prefilling
+        with self.tracer.span("batch.decode_step",
+                              grid_step=self.grid.stats["steps"] + 1,
+                              prefill_slots=prefilling,
+                              decode_slots=decoding):
+            toks = self._feed_tokens()
+            logits, self.cache = self._step(self.params, self.cache,
+                                            jnp.asarray(toks))
+            nxt = np.asarray(jnp.argmax(logits, -1))
         self.grid.tick()
         for i, req in enumerate(self.grid.occupant):
             if req is None:

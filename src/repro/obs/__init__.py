@@ -1,0 +1,30 @@
+"""Fleet observability: phase-level tracing, metrics, exporters.
+
+Three zero-dependency layers (see ``docs/OBSERVABILITY.md``):
+
+* ``obs.trace`` — bounded thread-safe span tracer over monotonic clocks,
+  wired through every phase of the serving hot path;
+* ``obs.metrics`` — labeled counter/gauge/fixed-bucket-histogram registry
+  that ``serving.telemetry.FleetTelemetry`` is built on;
+* ``obs.export`` — Prometheus text exposition, JSONL event log, and a
+  Chrome ``trace_event`` dump of spans.
+
+Hard contract: instrumentation never touches the jitted computation and
+never adds host↔device syncs — tracing on vs. off is bit-identical
+(pinned in ``tests/test_obs_serving.py``).
+"""
+from .export import (chrome_trace, parse_prometheus_text, prometheus_text,
+                     read_jsonl, span_records, write_chrome_trace,
+                     write_jsonl)
+from .metrics import (LATENCY_BUCKETS_S, RATIO_BUCKETS, Counter, Family,
+                      Gauge, Histogram, MetricsRegistry, linear_buckets,
+                      log_buckets)
+from .trace import NULL_TRACER, Span, Tracer
+
+__all__ = [
+    "Counter", "Family", "Gauge", "Histogram", "LATENCY_BUCKETS_S",
+    "MetricsRegistry", "NULL_TRACER", "RATIO_BUCKETS", "Span", "Tracer",
+    "chrome_trace", "linear_buckets", "log_buckets", "parse_prometheus_text",
+    "prometheus_text", "read_jsonl", "span_records", "write_chrome_trace",
+    "write_jsonl",
+]

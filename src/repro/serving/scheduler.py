@@ -60,6 +60,7 @@ import numpy as np
 from repro.core.snn import SNNConfig, init_stream_deltas, init_stream_state
 from repro.launch import sharding
 from repro.launch.batching import SlotGrid
+from repro.obs.trace import NULL_TRACER, Tracer
 
 from .adapt import AdaptConfig, make_chunk_fn
 from .session import (SessionStatus, StreamSession, WindowPrediction,
@@ -90,6 +91,13 @@ class StreamScheduler:
         attached. Note the mode is baked at compile time: a service that
         *becomes* frozen later stops paying the host transfer but keeps
         the (tiny) in-scan accumulators until the scheduler is rebuilt.
+      tracer: an ``obs.trace.Tracer`` recording phase-level spans
+        (``sched.step/stage/poll_sources/admit/dispatch/retire/
+        device_wait``, ``topology.epoch``); the shared no-op
+        ``NULL_TRACER`` by default. Spans wrap host phases at
+        already-synchronous points only — tracing on vs. off is
+        bit-identical and leaves the serving jaxpr unchanged (pinned in
+        ``tests/test_obs_serving.py``).
     """
 
     def __init__(self, params, cfg: SNNConfig, n_slots: int,
@@ -97,7 +105,8 @@ class StreamScheduler:
                  clock_dt_s: float = 0.002,
                  telemetry: Optional[FleetTelemetry] = None,
                  mesh=None, topology=None, pipeline_depth: int = 0,
-                 want_factors: Optional[bool] = None):
+                 want_factors: Optional[bool] = None,
+                 tracer: Optional[Tracer] = None):
         self.params, self.cfg = params, cfg
         self.mesh = mesh
         self.topology = topology          # Optional[TopologyService]
@@ -142,6 +151,7 @@ class StreamScheduler:
         self.chunk_fn = make_chunk_fn(cfg, adapt, mesh=mesh,
                                       want_factors=want_factors)
         self.telemetry = telemetry or FleetTelemetry()
+        self.tracer = tracer or NULL_TRACER
         self.retired: List[StreamSession] = []
 
     # -- lifecycle -----------------------------------------------------------
@@ -167,17 +177,35 @@ class StreamScheduler:
         self.state, self.deltas = state, deltas
 
     def _admit(self) -> None:
-        def on_admit(slot: int, sess: StreamSession):
-            sess.slot, sess.status = slot, SessionStatus.ACTIVE
-            self._replace_lanes(*reset_lane(
-                self.state, self.deltas, self.cfg, slot))
-        self.grid.admit(on_admit)
+        with self.tracer.span("sched.admit",
+                              grid_step=self._staging_step) as sp:
+            n = 0
+
+            def on_admit(slot: int, sess: StreamSession):
+                nonlocal n
+                n += 1
+                sess.slot, sess.status = slot, SessionStatus.ACTIVE
+                self._replace_lanes(*reset_lane(
+                    self.state, self.deltas, self.cfg, slot))
+            self.grid.admit(on_admit)
+            sp.set(admitted=n)
 
     def _poll_sources(self) -> None:
-        for sess in list(self.grid.occupant) + list(self.grid.queue):
-            if sess is not None and sess.source is not None:
-                for chunk in sess.source.poll(self.clock):
-                    sess.push_events(chunk)
+        with self.tracer.span("sched.poll_sources",
+                              grid_step=self._staging_step) as sp:
+            n = 0
+            for sess in list(self.grid.occupant) + list(self.grid.queue):
+                if sess is not None and sess.source is not None:
+                    for chunk in sess.source.poll(self.clock):
+                        sess.push_events(chunk)
+                        n += 1
+            sp.set(chunks=n)
+
+    @property
+    def _staging_step(self) -> int:
+        """Grid-step number the *next dispatch* will get (``grid.tick``
+        runs at dispatch) — what stage-side spans attribute to."""
+        return self.grid.stats["steps"] + 1
 
     # -- phase 1: stage ------------------------------------------------------
     def _stage(self) -> StagedChunk:
@@ -190,6 +218,13 @@ class StreamScheduler:
         Runs while the previous step's device compute is in flight when
         the pipeline is enabled — this is the overlapped phase.
         """
+        t0 = time.perf_counter()
+        with self.tracer.span("sched.stage", grid_step=self._staging_step):
+            staged = self._stage_body()
+        self.telemetry.record_phase("stage", time.perf_counter() - t0)
+        return staged
+
+    def _stage_body(self) -> StagedChunk:
         self.clock += self.clock_dt_s
         self._poll_sources()
         self._admit()
@@ -229,21 +264,47 @@ class StreamScheduler:
         host wait — then free retiring sessions' lanes so the *next* stage
         phase can re-admit into them (same admission timing as the serial
         path, where retire frees lanes before the next step's admits)."""
-        self.deltas, self.state, metrics = self.chunk_fn(
-            self.params, self.deltas, self.state, staged.events,
-            staged.valid, staged.adapt_mask)
-        self.grid.tick()
-        for slot, _ in staged.retiring:
-            self.grid.retire(slot)
-        return InFlight(staged=staged, deltas=self.deltas, metrics=metrics,
-                        grid_step=self.grid.stats["steps"])
+        t0 = time.perf_counter()
+        with self.tracer.span("sched.dispatch",
+                              grid_step=self._staging_step) as sp:
+            self.deltas, self.state, metrics = self.chunk_fn(
+                self.params, self.deltas, self.state, staged.events,
+                staged.valid, staged.adapt_mask)
+            self.grid.tick()
+            for slot, _ in staged.retiring:
+                self.grid.retire(slot)
+            sp.set(lanes=len(staged.lanes), retiring=len(staged.retiring))
+            fl = InFlight(staged=staged, deltas=self.deltas, metrics=metrics,
+                          grid_step=self.grid.stats["steps"])
+        self.telemetry.record_phase("dispatch", time.perf_counter() - t0)
+        return fl
 
     # -- phase 3: retire -----------------------------------------------------
     def _retire(self, fl: InFlight) -> None:
         """Consume one in-flight step: fetch metrics (the only device
         wait), route predictions, fold telemetry, finalize retiring
-        sessions from the captured handles, drive the topology service."""
-        m = jax.device_get(fl.metrics)         # one transfer for all metrics
+        sessions from the captured handles, drive the topology service.
+
+        The retire span/phase is attributed to ``fl.grid_step`` — the step
+        that *produced* these results — not the step currently staging:
+        under pipelining the two differ, and whole-``step()`` wall alone
+        cannot say which grid step a retire belonged to.
+        """
+        t0 = time.perf_counter()
+        with self.tracer.span("sched.retire", grid_step=fl.grid_step):
+            with self.tracer.span("sched.device_wait",
+                                  grid_step=fl.grid_step):
+                tw0 = time.perf_counter()
+                m = jax.device_get(fl.metrics)  # one transfer for all metrics
+                wait_s = time.perf_counter() - tw0
+            # fl.queued_s: host work done while this step was in flight
+            # (stamped by StagingPipeline.push/pop; 0.0 on the serial path)
+            self.telemetry.record_overlap(hidden_s=fl.queued_s,
+                                          wait_s=wait_s)
+            self._retire_body(fl, m)
+        self.telemetry.record_phase("retire", time.perf_counter() - t0)
+
+    def _retire_body(self, fl: InFlight, m) -> None:
         staged = fl.staged
         logits = m.logits                      # [C, S, n_out]
         wend = m.window_end                    # [C, S]
@@ -287,15 +348,23 @@ class StreamScheduler:
         in-flight device compute), retire the oldest in-flight step if the
         pipeline is full, then dispatch — bookkeeping for the staged step
         lands one ``step()`` later (or at :meth:`flush`).
+
+        Note the whole-step wall time recorded here therefore mixes this
+        step's stage/dispatch with an *earlier* step's retire under
+        pipelining; per-phase spans and ``telemetry.record_phase`` carry
+        the correct per-grid-step attribution (each span's ``grid_step``
+        attr names the step that owns the work, and phase sums reconcile
+        with step walls — pinned in ``tests/test_obs_serving.py``).
         """
         t0 = time.perf_counter()
-        staged = self._stage()
-        if self.pipeline.depth == 0:
-            self._retire(self._dispatch(staged))
-        else:
-            while self.pipeline.full:
-                self._retire(self.pipeline.pop())
-            self.pipeline.push(self._dispatch(staged))
+        with self.tracer.span("sched.step", grid_step=self._staging_step):
+            staged = self._stage()
+            if self.pipeline.depth == 0:
+                self._retire(self._dispatch(staged))
+            else:
+                while self.pipeline.full:
+                    self._retire(self.pipeline.pop())
+                self.pipeline.push(self._dispatch(staged))
         self.telemetry.record_step(time.perf_counter() - t0)
         return staged.fed
 
@@ -331,8 +400,13 @@ class StreamScheduler:
             merge_slots = tuple(
                 slot for slot, sess in enumerate(self.grid.occupant)
                 if sess is not None and sess.adapt)
-        params, deltas, event = svc.evolve(
-            self.params, self.deltas, merge_slots=merge_slots, grid_step=step)
+        with self.tracer.span("topology.epoch", grid_step=step,
+                              epoch=svc.epoch_idx) as sp:
+            params, deltas, event = svc.evolve(
+                self.params, self.deltas, merge_slots=merge_slots,
+                grid_step=step)
+            sp.set(pruned=event.pruned, regrown=event.regrown,
+                   merged=len(event.merged_slots))
         self.params = params
         self._replace_lanes(self.state, deltas)
         self.telemetry.record_topology_epoch(

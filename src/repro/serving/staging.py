@@ -37,6 +37,7 @@ pinned bit-identical (1-device and 8-device) in
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Deque, Dict, List, Tuple
 
@@ -83,6 +84,10 @@ class InFlight:
     deltas: Any                  # [S, L, Kmax, N] device handle (post-step)
     metrics: Any                 # ChunkMetrics device handles
     grid_step: int               # grid.stats["steps"] after this step's tick
+    # host/device overlap bookkeeping (stamped by StagingPipeline push/pop;
+    # both stay 0.0 on the serial depth=0 path, which never enqueues)
+    pushed_at: float = 0.0       # perf_counter when the step entered the queue
+    queued_s: float = 0.0        # time in flight before retire began
 
 
 class StagingPipeline:
@@ -124,8 +129,20 @@ class StagingPipeline:
                                "in-flight steps; retire immediately instead")
         if self.full:
             raise RuntimeError("staging pipeline full; retire first")
+        if hasattr(fl, "pushed_at"):
+            fl.pushed_at = time.perf_counter()
         self._q.append(fl)
 
     def pop(self) -> InFlight:
-        """Oldest in-flight step (FIFO — retire order is dispatch order)."""
-        return self._q.popleft()
+        """Oldest in-flight step (FIFO — retire order is dispatch order).
+
+        Stamps ``queued_s`` — how long the step was in flight while the
+        host kept working (staging later steps). Paired with the retire
+        phase's measured device wait, this yields the per-step host/device
+        **overlap ratio** ``queued / (queued + wait)``: ~1 host-bound,
+        ~0 device-bound (see ``FleetTelemetry.record_overlap``).
+        """
+        fl = self._q.popleft()
+        if hasattr(fl, "pushed_at") and fl.pushed_at:
+            fl.queued_s = time.perf_counter() - fl.pushed_at
+        return fl

@@ -1,59 +1,114 @@
-"""Per-stream and fleet-level serving telemetry.
+"""Per-stream and fleet-level serving telemetry, on the obs registry.
 
 The chip's power story is counted events priced at measured constants
 (core/energy.py); the serving runtime keeps that bookkeeping per stream so
 a fleet operator can answer "which streams are hot, which are coasting on
 the gate, what does a slot-second cost". Counters are monotone by
-construction — every update adds a non-negative per-chunk quantity — and
-per-stream separable: a slot's counters only ever receive that slot's lane
-of the chunk metrics.
+construction — every update adds a non-negative per-chunk quantity (the
+``obs.metrics.Counter`` underneath *raises* on a negative increment) —
+and per-stream separable: a slot's counters only ever receive that slot's
+lane of the chunk metrics.
 
-``FleetTelemetry`` also tracks host-side step latencies (the wall time of
-one full ``StreamScheduler.step()`` — stage + dispatch + retire phases)
-for the p50/p99 numbers in the serving benchmark, and — when a ``TopologyService`` drives live DSST epochs — a
-log of topology events (per-epoch pruned/regrown counts, mask-change
-fraction, hot-stream merges) so an operator can see connectivity churn
-next to the energy counters it is supposed to pay for.
+Since the observability PR, ``FleetTelemetry`` is a facade over a
+:class:`repro.obs.metrics.MetricsRegistry`: stream counters are labeled
+``serving_stream_*_total{sid=...}`` counter families, step/phase wall
+times land in **bounded fixed-bucket histograms** (the old unbounded
+``step_latencies_s`` list is gone — memory is O(1) in steps, p50/p99 are
+interpolated within ~10% bucket width), and the whole registry exports as
+Prometheus text / JSONL / a benchmark artifact via ``repro.obs.export``.
+
+Beyond whole-step wall time the telemetry now attributes **per-phase**
+wall (stage / dispatch / retire / flush — fed by the scheduler's spans,
+each tagged with the grid step it belongs to even when pipelining blurs
+their wall-clock order) and the per-step **host/device overlap ratio**:
+``hidden / (hidden + wait)`` where *hidden* is the time an in-flight step
+spent computing while the host staged the next one, and *wait* is the
+retire-phase device block. ~1 means the fleet is host-bound (a deeper
+pipeline buys nothing); ~0 means device-bound (staging hides nothing).
+This is the occupancy signal adaptive ``pipeline_depth`` control needs.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.energy import OperatingPoint, report
+from repro.obs.metrics import (LATENCY_BUCKETS_S, RATIO_BUCKETS,
+                               MetricsRegistry)
+
+# every per-stream counter family: attribute name -> (metric name, help)
+STREAM_COUNTER_FAMILIES = {
+    "timesteps": ("serving_stream_timesteps_total",
+                  "valid timesteps advanced"),
+    "events_in": ("serving_stream_events_in_total",
+                  "input spikes consumed"),
+    "sop_forward": ("serving_stream_sop_forward_total",
+                    "forward synaptic ops"),
+    "sop_wu": ("serving_stream_sop_wu_total",
+               "weight-update MACs actually paid"),
+    "sop_wu_offered": ("serving_stream_sop_wu_offered_total",
+                       "weight-update MACs offered to the gate"),
+    "gate_opened": ("serving_stream_gate_opened_total",
+                    "gate-open decisions"),
+    "gate_offered": ("serving_stream_gate_offered_total",
+                     "gate decisions offered"),
+    "windows": ("serving_stream_windows_total",
+                "completed T-step windows (predictions)"),
+}
+
+# cumulative but NOT monotone (a local loss can be negative) — gauge-backed
+STREAM_GAUGE_FAMILIES = {
+    "local_loss": ("serving_stream_local_loss_sum",
+                   "summed local OSSL loss"),
+}
+
+PHASES = ("stage", "dispatch", "retire", "flush")
 
 
-@dataclasses.dataclass
 class StreamCounters:
-    """Monotone per-stream event counters (energy-model inputs)."""
-    sid: int
-    timesteps: float = 0.0
-    events_in: float = 0.0          # input spikes consumed
-    sop_forward: float = 0.0
-    sop_wu: float = 0.0
-    sop_wu_offered: float = 0.0
-    gate_opened: float = 0.0
-    gate_offered: float = 0.0
-    windows: int = 0                # completed T-step windows (predictions)
-    local_loss: float = 0.0
+    """Monotone per-stream event counters (energy-model inputs).
+
+    A view over one ``sid``'s children of the registry's labeled counter
+    families: reads (``c.timesteps`` etc.) pull the live counter values,
+    :meth:`add_chunk` increments them. Negative increments raise in the
+    counter itself — monotonicity is enforced, not just asserted.
+    """
+
+    def __init__(self, sid: int, registry: Optional[MetricsRegistry] = None):
+        self.sid = sid
+        registry = registry or MetricsRegistry()
+        self._c = {
+            attr: registry.counter(name, help, labels=("sid",))
+                          .labels(sid=str(sid))
+            for attr, (name, help) in STREAM_COUNTER_FAMILIES.items()}
+        self._c.update({
+            attr: registry.gauge(name, help, labels=("sid",))
+                          .labels(sid=str(sid))
+            for attr, (name, help) in STREAM_GAUGE_FAMILIES.items()})
+
+    def __getattr__(self, attr):
+        try:
+            child = self.__dict__["_c"][attr]
+        except KeyError:
+            raise AttributeError(attr) from None
+        return int(child.value) if attr == "windows" else child.value
 
     def add_chunk(self, *, steps, events_in, sop_forward, sop_wu,
                   sop_wu_offered, gate_opened, gate_offered, windows,
                   local_loss) -> None:
         """Fold one grid step's slice of the chunk metrics into this
-        stream's counters (all non-negative scalars — monotonicity is by
-        construction, pinned in tests)."""
-        self.timesteps += float(steps)
-        self.events_in += float(events_in)
-        self.sop_forward += float(sop_forward)
-        self.sop_wu += float(sop_wu)
-        self.sop_wu_offered += float(sop_wu_offered)
-        self.gate_opened += float(gate_opened)
-        self.gate_offered += float(gate_offered)
-        self.windows += int(windows)
-        self.local_loss += float(local_loss)
+        stream's counters (all non-negative scalars — a negative one is a
+        bug upstream and raises here)."""
+        self._c["timesteps"].inc(float(steps))
+        self._c["events_in"].inc(float(events_in))
+        self._c["sop_forward"].inc(float(sop_forward))
+        self._c["sop_wu"].inc(float(sop_wu))
+        self._c["sop_wu_offered"].inc(float(sop_wu_offered))
+        self._c["gate_opened"].inc(float(gate_opened))
+        self._c["gate_offered"].inc(float(gate_offered))
+        self._c["windows"].inc(int(windows))
+        self._c["local_loss"].inc(float(local_loss))
 
     @property
     def wu_skip_rate(self) -> float:
@@ -77,41 +132,110 @@ class StreamCounters:
 
 
 class FleetTelemetry:
-    """Rollup across streams + host-side step-latency percentiles."""
+    """Rollup across streams + host-side step/phase latency + overlap.
 
-    def __init__(self, op: Optional[OperatingPoint] = None):
+    Pass (or read) ``registry`` to share one :class:`MetricsRegistry`
+    across subsystems and export everything in one Prometheus scrape.
+    """
+
+    def __init__(self, op: Optional[OperatingPoint] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self.op = op or OperatingPoint.low_power()
+        self.registry = registry or MetricsRegistry()
         self.streams: Dict[int, StreamCounters] = {}
-        self.step_latencies_s: List[float] = []
-        self.steps = 0
-        self.flush_wall_s = 0.0
+        self._steps = self.registry.counter(
+            "serving_grid_steps_total", "scheduler grid steps dispatched")
+        self._step_hist = self.registry.histogram(
+            "serving_step_latency_seconds",
+            "host wall time of one StreamScheduler.step() call",
+            buckets=LATENCY_BUCKETS_S)
+        self._phase_hist = self.registry.histogram(
+            "serving_phase_seconds",
+            "per-phase host wall time, attributed to the owning grid step",
+            labels=("phase",), buckets=LATENCY_BUCKETS_S)
+        self._flush_wall = self.registry.counter(
+            "serving_flush_seconds_total",
+            "pipeline-flush wall (retires after the last grid step)")
+        self._overlap_hist = self.registry.histogram(
+            "serving_overlap_ratio",
+            "per-step host/device overlap: hidden / (hidden + wait)",
+            buckets=RATIO_BUCKETS)
+        self._hidden_s = self.registry.counter(
+            "serving_overlap_hidden_seconds_total",
+            "device compute hidden behind host staging")
+        self._wait_s = self.registry.counter(
+            "serving_device_wait_seconds_total",
+            "retire-phase blocks on device results")
+        self._topo_epochs = self.registry.counter(
+            "serving_topology_epochs_total", "live DSST prune/regrow epochs")
+        self._topo_pruned = self.registry.counter(
+            "serving_topology_pruned_total", "connections pruned by epochs")
+        self._topo_regrown = self.registry.counter(
+            "serving_topology_regrown_total", "connections regrown by epochs")
+        self._topo_merged = self.registry.counter(
+            "serving_streams_merged_total", "hot streams folded into base")
+        self._topo_mask_change = self.registry.gauge(
+            "serving_topology_mask_change", "last epoch's mask-change frac")
         self.topology_epochs: List[dict] = []
+
+    @property
+    def steps(self) -> int:
+        """Grid steps recorded (dispatches; flush retires excluded)."""
+        return int(self._steps.value)
 
     def stream(self, sid: int) -> StreamCounters:
         """The (created-on-first-use) per-stream counter record for ``sid``."""
         if sid not in self.streams:
-            self.streams[sid] = StreamCounters(sid)
+            self.streams[sid] = StreamCounters(sid, self.registry)
         return self.streams[sid]
 
     def record_step(self, latency_s: float) -> None:
-        """Log one grid step's host wall time (stage+dispatch+retire of a
-        ``StreamScheduler.step()`` call — under a staging pipeline the
-        retire inside belongs to an earlier step, but the *sum* over steps
-        still accounts every phase exactly once)."""
-        self.steps += 1
-        self.step_latencies_s.append(float(latency_s))
+        """Log one grid step's host wall time (one ``step()`` call — under
+        a staging pipeline the retire inside belongs to an earlier grid
+        step, but the *sum* over steps still accounts every phase exactly
+        once; per-phase attribution lives in ``record_phase``)."""
+        self._steps.inc()
+        self._step_hist.observe(float(latency_s))
 
     def record_flush(self, latency_s: float) -> None:
         """Log pipeline-flush wall time (retiring in-flight steps after the
         last grid step). Not a grid step — excluded from the latency
         percentiles, but included in the throughput wall so pipelined
         events/s never get a free final step."""
-        self.flush_wall_s += float(latency_s)
+        self._flush_wall.inc(float(latency_s))
+
+    def record_phase(self, phase: str, latency_s: float) -> None:
+        """Log one phase's host wall time (stage/dispatch/retire/flush).
+        The scheduler calls this from the span that also carries the
+        owning ``grid_step`` — so phase sums reconcile with step walls
+        regardless of pipeline reordering (pinned in tests)."""
+        self._phase_hist.labels(phase=phase).observe(float(latency_s))
+
+    def record_overlap(self, hidden_s: float, wait_s: float) -> float:
+        """Log one retired step's host/device overlap; returns the ratio.
+
+        ``hidden_s``: how long the step was in flight while the host did
+        useful work (dispatch → retire-start). ``wait_s``: how long retire
+        then blocked on the device. Serial (unpipelined) steps record
+        hidden=0 → ratio 0.
+        """
+        hidden_s, wait_s = max(0.0, float(hidden_s)), max(0.0, float(wait_s))
+        denom = hidden_s + wait_s
+        ratio = hidden_s / denom if denom > 0 else 0.0
+        self._hidden_s.inc(hidden_s)
+        self._wait_s.inc(wait_s)
+        self._overlap_hist.observe(ratio)
+        return ratio
 
     def record_topology_epoch(self, *, grid_step: int, pruned: int,
                               regrown: int, mask_change: float,
                               merged_streams: int) -> None:
         """Log one live DSST prune/regrow epoch (topology_service.py)."""
+        self._topo_epochs.inc()
+        self._topo_pruned.inc(int(pruned))
+        self._topo_regrown.inc(int(regrown))
+        self._topo_merged.inc(int(merged_streams))
+        self._topo_mask_change.set(float(mask_change))
         self.topology_epochs.append({
             "grid_step": int(grid_step), "pruned": int(pruned),
             "regrown": int(regrown), "mask_change": float(mask_change),
@@ -119,37 +243,60 @@ class FleetTelemetry:
 
     # -- rollup --------------------------------------------------------------
     def latency_percentiles(self) -> dict:
-        """p50/p99 of recorded grid-step wall times, in milliseconds."""
-        if not self.step_latencies_s:
+        """p50/p99 of recorded grid-step wall times, in milliseconds
+        (interpolated from the bounded histogram — within one ~10% bucket
+        of the exact list-based values the old telemetry computed)."""
+        if self._step_hist.count == 0:
             return {"p50_ms": 0.0, "p99_ms": 0.0}
-        lat = np.asarray(self.step_latencies_s) * 1e3
-        return {"p50_ms": float(np.percentile(lat, 50)),
-                "p99_ms": float(np.percentile(lat, 99))}
+        return {"p50_ms": self._step_hist.percentile(50) * 1e3,
+                "p99_ms": self._step_hist.percentile(99) * 1e3}
+
+    def phase_percentiles(self) -> dict:
+        """Per-phase ``{phase: {"p50_ms", "p99_ms", "total_s"}}`` for every
+        phase that recorded at least one observation."""
+        out = {}
+        for values, child in self._phase_hist.samples():
+            if child.count:
+                out[values[0]] = {"p50_ms": child.percentile(50) * 1e3,
+                                  "p99_ms": child.percentile(99) * 1e3,
+                                  "total_s": child.sum}
+        return out
+
+    def overlap_ratio(self) -> float:
+        """Aggregate host/device overlap over the whole run:
+        ``hidden_total / (hidden_total + wait_total)`` (0.0 serial)."""
+        denom = self._hidden_s.value + self._wait_s.value
+        return self._hidden_s.value / denom if denom > 0 else 0.0
 
     def rollup(self) -> dict:
         """Fleet-level summary: summed stream counters, throughput rates
         (events/s, timesteps/s over the recorded step + flush wall),
-        latency percentiles, fleet energy, and the topology rollup. See
-        docs/SERVING.md for the field glossary."""
-        tot = StreamCounters(sid=-1)
-        for c in self.streams.values():
-            tot.add_chunk(steps=c.timesteps, events_in=c.events_in,
-                          sop_forward=c.sop_forward, sop_wu=c.sop_wu,
-                          sop_wu_offered=c.sop_wu_offered,
-                          gate_opened=c.gate_opened,
-                          gate_offered=c.gate_offered, windows=c.windows,
-                          local_loss=c.local_loss)
-        wall = sum(self.step_latencies_s) + self.flush_wall_s
+        latency percentiles, overlap ratio, fleet energy, and the topology
+        rollup. See docs/SERVING.md / docs/OBSERVABILITY.md for the field
+        glossary."""
+        def fam_total(attr):
+            fam = self.registry.get(STREAM_COUNTER_FAMILIES[attr][0])
+            return fam.total() if fam is not None else 0.0
+
+        timesteps = fam_total("timesteps")
+        events_in = fam_total("events_in")
+        sop_forward = fam_total("sop_forward")
+        sop_wu = fam_total("sop_wu")
+        sop_wu_offered = fam_total("sop_wu_offered")
+        wall = self._step_hist.sum + self._flush_wall.value
         out = {
             "n_streams": len(self.streams),
             "grid_steps": self.steps,
-            "timesteps": tot.timesteps,
-            "events_in": tot.events_in,
-            "windows": tot.windows,
-            "wu_skip_rate": tot.wu_skip_rate,
-            "fleet_energy": tot.energy(self.op),
-            "events_per_s": tot.events_in / wall if wall > 0 else 0.0,
-            "timesteps_per_s": tot.timesteps / wall if wall > 0 else 0.0,
+            "timesteps": timesteps,
+            "events_in": events_in,
+            "windows": int(fam_total("windows")),
+            "wu_skip_rate": (1.0 - sop_wu / sop_wu_offered
+                             if sop_wu_offered > 0 else 0.0),
+            "fleet_energy": report(sop_forward, sop_wu, sop_wu_offered,
+                                   timesteps, op=self.op).as_dict(),
+            "events_per_s": events_in / wall if wall > 0 else 0.0,
+            "timesteps_per_s": timesteps / wall if wall > 0 else 0.0,
+            "overlap_ratio": self.overlap_ratio(),
             **self.latency_percentiles(),
             **self.topology_rollup(),
         }

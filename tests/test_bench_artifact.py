@@ -1,0 +1,67 @@
+"""The ``benchmarks/run.py --json`` machine-readable results artifact.
+
+Two layers: :func:`benchmarks.run.write_artifact` as a unit (schema,
+row passthrough, optional structured extras, partial-failure recording),
+and the real CLI end-to-end — run one quick module with ``--json`` in a
+subprocess and consume the artifact the way a trajectory-tracking script
+would.
+"""
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.run import ARTIFACT_SCHEMA, write_artifact
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_write_artifact_schema_and_extras(tmp_path):
+    path = str(tmp_path / "out.json")
+    rows = [
+        {"name": "a/b", "us_per_call": 12.5, "derived": "x=1"},
+        {"name": "serving/hotpath", "us_per_call": 3.0, "derived": "y=2",
+         "metrics": {"events_per_s": 100.0, "overlap_ratio": 0.4,
+                     "phase_stage_p50_ms": 0.1},
+         "obs": {"serving_grid_steps_total": {"type": "counter",
+                                              "samples": []}}},
+    ]
+    doc = write_artifact(path, rows, failed=1, argv=["bench", "--json", path])
+    on_disk = json.load(open(path))
+    assert on_disk == json.loads(json.dumps(doc))   # what's returned is written
+    assert on_disk["schema"] == ARTIFACT_SCHEMA == "repro-bench/1"
+    assert on_disk["failed"] == 1
+    assert on_disk["argv"] == ["bench", "--json", path]
+    assert on_disk["created_unix_s"] > 0
+    r0, r1 = on_disk["rows"]
+    assert r0 == {"name": "a/b", "us_per_call": 12.5, "derived": "x=1"}
+    assert r1["metrics"]["overlap_ratio"] == 0.4
+    assert "serving_grid_steps_total" in r1["obs"]
+    # extra row keys beyond the contract never leak into the artifact
+    doc2 = write_artifact(path, [{"name": "n", "us_per_call": 1,
+                                  "derived": "", "junk": object()}])
+    assert set(doc2["rows"][0]) == {"name", "us_per_call", "derived"}
+
+
+def test_cli_json_artifact_end_to_end(tmp_path):
+    """``python -m benchmarks.run --only table1 --json out.json`` produces
+    an artifact that agrees with the CSV on stdout."""
+    path = str(tmp_path / "bench.json")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "table1",
+         "--json", path],
+        capture_output=True, text=True, env=env, cwd=_ROOT, timeout=560)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    doc = json.load(open(path))
+    assert doc["schema"] == ARTIFACT_SCHEMA
+    assert doc["failed"] == 0
+    assert doc["rows"], "table1 produced no rows"
+    csv_lines = [l for l in out.stdout.strip().splitlines()
+                 if l and not l.startswith("name,")]
+    assert len(doc["rows"]) == len(csv_lines)
+    for row, line in zip(doc["rows"], csv_lines):
+        assert line.startswith(f"{row['name']},")
+        assert {"name", "us_per_call", "derived"} <= set(row)
+        assert isinstance(row["us_per_call"], float)

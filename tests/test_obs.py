@@ -1,0 +1,287 @@
+"""obs unit coverage: tracer, metrics registry, exporter golden formats.
+
+The contracts the serving integration relies on, tested in isolation:
+span nesting and the ring-buffer bound, thread safety, counter
+monotonicity-by-construction, the bounded histogram's O(1)-in-
+observations memory with percentiles within bucket tolerance of exact,
+and byte-for-byte exporter goldens (Prometheus text, JSONL, Chrome
+``trace_event``).
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs import (NULL_TRACER, MetricsRegistry, Tracer, chrome_trace,
+                       linear_buckets, log_buckets, parse_prometheus_text,
+                       prometheus_text, read_jsonl, span_records,
+                       write_chrome_trace, write_jsonl)
+from repro.obs.metrics import Histogram
+
+# ------------------------------------------------------------------- tracer
+
+
+def test_span_nesting_ids_and_attrs():
+    tr = Tracer()
+    with tr.span("outer", step=1):
+        with tr.span("inner") as sp:
+            sp.set(count=3)
+        with tr.span("inner2"):
+            pass
+    spans = {s.name: s for s in tr.spans()}
+    assert set(spans) == {"outer", "inner", "inner2"}
+    outer = spans["outer"]
+    assert outer.parent_id is None and outer.attr("step") == 1
+    assert spans["inner"].parent_id == outer.span_id
+    assert spans["inner2"].parent_id == outer.span_id
+    assert spans["inner"].attr("count") == 3
+    assert spans["inner"].span_id != spans["inner2"].span_id
+    # children recorded before the parent (exit order), durations nest
+    assert outer.dur_s >= spans["inner"].dur_s >= 0.0
+    assert outer.t0_s <= spans["inner"].t0_s
+
+
+def test_ring_buffer_bound_and_drop_count():
+    tr = Tracer(capacity=8)
+    for i in range(20):
+        with tr.span("s", i=i):
+            pass
+    spans = tr.spans()
+    assert len(spans) == 8                      # bounded: O(capacity)
+    assert tr.n_recorded == 20 and tr.n_dropped == 12
+    assert [s.attr("i") for s in spans] == list(range(12, 20))  # newest kept
+    tr.clear()
+    assert tr.spans() == []
+
+
+def test_disabled_tracer_is_noop():
+    tr = Tracer(enabled=False)
+    with tr.span("x") as sp:
+        sp.set(a=1)             # no-op handle supports the same surface
+    assert tr.spans() == [] and tr.n_recorded == 0
+    with NULL_TRACER.span("y"):
+        pass
+    assert NULL_TRACER.spans() == []
+    # the disabled path hands back the shared singleton (no allocation)
+    assert tr.span("a") is tr.span("b")
+
+
+def test_tracer_thread_safety():
+    """Concurrent recording from many threads: no lost/corrupt spans and
+    per-thread parent stacks stay independent (the pipeline_depth=2-style
+    usage where a poller thread would trace alongside the main loop)."""
+    tr = Tracer(capacity=10_000)
+    n_threads, n_spans = 8, 200
+
+    def work(t):
+        for i in range(n_spans):
+            with tr.span("outer", t=t):
+                with tr.span("inner", t=t):
+                    pass
+
+    threads = [threading.Thread(target=work, args=(t,), name=f"w{t}")
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    spans = tr.spans()
+    assert len(spans) == tr.n_recorded == n_threads * n_spans * 2
+    ids = [s.span_id for s in spans]
+    assert len(set(ids)) == len(ids), "span ids collided across threads"
+    parents = {p.span_id: p for p in spans if p.name == "outer"}
+    for s in spans:
+        if s.name == "inner":
+            # parent is an outer span from the SAME thread
+            assert s.parent_id in parents
+            assert parents[s.parent_id].thread == s.thread
+
+
+def test_tracer_capacity_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        Tracer(capacity=0)
+
+
+# ------------------------------------------------------------------ metrics
+
+
+def test_counter_monotone_by_construction():
+    reg = MetricsRegistry()
+    c = reg.counter("requests_total", "help", labels=("code",))
+    c.labels(code="200").inc()
+    c.labels(code="200").inc(2.5)
+    c.labels(code="500").inc(0.0)
+    assert c.labels(code="200").value == 3.5
+    assert c.total() == 3.5
+    with pytest.raises(ValueError, match=">= 0"):
+        c.labels(code="200").inc(-1.0)
+    with pytest.raises(ValueError, match="expected labels"):
+        c.labels(status="200")
+
+
+def test_gauge_and_family_reuse():
+    reg = MetricsRegistry()
+    g = reg.gauge("depth", "queue depth")
+    g.set(3)
+    g.inc(-1)
+    assert g.value == 2.0
+    assert reg.gauge("depth") is g          # create-or-get
+    with pytest.raises(ValueError, match="already registered"):
+        reg.counter("depth")                # kind mismatch refused
+    with pytest.raises(ValueError, match="invalid metric name"):
+        reg.counter("bad-name")
+    with pytest.raises(ValueError, match="invalid label name"):
+        reg.counter("ok", labels=("bad-label",))
+
+
+def test_histogram_percentiles_within_bucket_tolerance():
+    """p50/p99 from the bounded histogram stay within one bucket's
+    relative width (~10% for the default per_decade=24 latency buckets)
+    of the exact numpy percentiles — the satellite's regression contract
+    for FleetTelemetry.latency_percentiles."""
+    rng = np.random.default_rng(0)
+    h = Histogram(log_buckets(1e-6, 60.0, per_decade=24))
+    vals = np.exp(rng.normal(loc=np.log(3e-3), scale=1.0, size=5000))
+    for v in vals:
+        h.observe(v)
+    for q in (50, 90, 99):
+        exact = float(np.percentile(vals, q))
+        est = h.percentile(q)
+        assert abs(est - exact) / exact < 0.12, (q, est, exact)
+    assert h.count == len(vals)
+    np.testing.assert_allclose(h.sum, vals.sum(), rtol=1e-9)
+
+
+def test_histogram_memory_is_o1_in_observations():
+    """The unbounded-list fix: internal state size is a function of the
+    bucket count alone, not of how many values were observed."""
+    h = Histogram(linear_buckets(0.0, 1.0, 10))
+    size0 = len(h.bucket_counts())
+    for i in range(10_000):
+        h.observe((i % 100) / 100.0)
+    assert len(h.bucket_counts()) == size0 == 11
+    assert h.count == 10_000
+    # no per-observation storage exists anywhere on the object
+    assert all(not isinstance(getattr(h, a, None), list)
+               or a == "_counts" for a in dir(h))
+
+
+def test_histogram_edges_and_validation():
+    h = Histogram([1.0, 2.0])
+    h.observe(0.5)
+    h.observe(1.0)       # boundary: le semantics, lands in first bucket
+    h.observe(5.0)       # overflow bucket
+    assert h.bucket_counts() == [2, 0, 1]
+    assert h.percentile(100) == 2.0          # overflow clamps to last bound
+    assert Histogram([1.0]).percentile(50) == 0.0    # empty
+    with pytest.raises(ValueError, match="increasing"):
+        Histogram([1.0, 1.0])
+    with pytest.raises(ValueError, match="percentile"):
+        h.percentile(101)
+
+
+def test_bucket_helpers():
+    b = log_buckets(1e-3, 1.0, per_decade=3)
+    assert b[0] == 1e-3 and b[-1] >= 1.0
+    assert all(y > x for x, y in zip(b, b[1:]))
+    lin = linear_buckets(0.0, 1.0, 4)
+    np.testing.assert_allclose(lin, (0.25, 0.5, 0.75, 1.0))
+    with pytest.raises(ValueError):
+        log_buckets(1.0, 0.5)
+    with pytest.raises(ValueError):
+        linear_buckets(0.0, 1.0, 0)
+
+
+def test_registry_snapshot_shape():
+    reg = MetricsRegistry()
+    reg.counter("a_total", "A", labels=("k",)).labels(k="x").inc(2)
+    reg.histogram("lat_seconds", buckets=(0.1, 1.0)).observe(0.05)
+    snap = reg.snapshot()
+    assert snap["a_total"]["type"] == "counter"
+    assert snap["a_total"]["samples"] == [{"labels": {"k": "x"}, "value": 2.0}]
+    hs = snap["lat_seconds"]["samples"][0]
+    assert hs["count"] == 1 and hs["sum"] == 0.05
+    assert set(hs) == {"labels", "count", "sum", "p50", "p99"}
+    json.dumps(snap)                         # artifact-safe
+
+
+# ---------------------------------------------------------------- exporters
+
+
+def test_prometheus_text_golden():
+    reg = MetricsRegistry()
+    c = reg.counter("events_total", "events seen", labels=("sid",))
+    c.labels(sid="0").inc(3)
+    c.labels(sid="1").inc(1.5)
+    reg.gauge("depth", "queue depth").set(2)
+    reg.histogram("lat_seconds", "latency", buckets=(0.1, 1.0)).observe(0.05)
+    reg.histogram("lat_seconds").observe(10.0)
+    golden = "\n".join([
+        '# HELP depth queue depth',
+        '# TYPE depth gauge',
+        'depth 2',
+        '# HELP events_total events seen',
+        '# TYPE events_total counter',
+        'events_total{sid="0"} 3',
+        'events_total{sid="1"} 1.5',
+        '# HELP lat_seconds latency',
+        '# TYPE lat_seconds histogram',
+        'lat_seconds_bucket{le="0.1"} 1',
+        'lat_seconds_bucket{le="1"} 1',
+        'lat_seconds_bucket{le="+Inf"} 2',
+        'lat_seconds_sum 10.05',
+        'lat_seconds_count 2',
+    ]) + "\n"
+    assert prometheus_text(reg) == golden
+    parsed = parse_prometheus_text(golden)
+    assert parsed['events_total{sid="0"}'] == 3.0
+    assert parsed['lat_seconds_bucket{le="+Inf"}'] == 2.0
+
+
+def test_prometheus_label_escaping():
+    reg = MetricsRegistry()
+    reg.counter("c_total", labels=("p",)).labels(p='a"b\\c\nd').inc()
+    text = prometheus_text(reg)
+    assert 'c_total{p="a\\"b\\\\c\\nd"} 1' in text
+
+
+def test_jsonl_roundtrip(tmp_path):
+    path = str(tmp_path / "log.jsonl")
+    tr = Tracer()
+    with tr.span("stage", grid_step=3):
+        pass
+    n = write_jsonl(path, span_records(tr.spans()))
+    n += write_jsonl(path, [{"kind": "rollup", "events_per_s": 10.0}])
+    assert n == 2
+    recs = read_jsonl(path)
+    assert len(recs) == 2
+    assert recs[0]["kind"] == "span" and recs[0]["name"] == "stage"
+    assert recs[0]["grid_step"] == 3 and recs[0]["dur_s"] >= 0.0
+    assert recs[1] == {"kind": "rollup", "events_per_s": 10.0}
+    # append=False truncates
+    write_jsonl(path, [{"a": 1}], append=False)
+    assert read_jsonl(path) == [{"a": 1}]
+
+
+def test_chrome_trace_golden_structure(tmp_path):
+    tr = Tracer()
+    with tr.span("step", grid_step=1):
+        with tr.span("stage"):
+            pass
+    doc = chrome_trace(tr)
+    assert doc["displayTimeUnit"] == "ms"
+    events = doc["traceEvents"]
+    meta = [e for e in events if e["ph"] == "M"]
+    xs = {e["name"]: e for e in events if e["ph"] == "X"}
+    assert len(meta) == 1 and meta[0]["name"] == "thread_name"
+    assert set(xs) == {"step", "stage"}
+    step, stage = xs["step"], xs["stage"]
+    assert step["args"]["grid_step"] == 1
+    assert stage["args"]["parent_id"] == step["args"]["span_id"]
+    # µs timeline relative to the earliest span; child inside parent
+    assert step["ts"] == 0.0 and stage["ts"] >= 0.0
+    assert stage["ts"] + stage["dur"] <= step["ts"] + step["dur"] + 1e-3
+    path = str(tmp_path / "trace.json")
+    write_chrome_trace(path, tr)
+    assert json.load(open(path))["traceEvents"]
