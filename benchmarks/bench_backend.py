@@ -12,6 +12,12 @@ jitted training step and one serving chunk step under
 reporting per-step latency and the max |Δ| between the two trajectories —
 the CSV analogue of tests/test_engine_backends.py. Shapes are deliberately
 tiny: interpret mode unrolls every kernel grid point into the trace.
+
+``--density`` sweeps the serving chunk step's delta layout at the kernel
+level: at each N:M density the same chunk fn is timed with compact
+``[S, L, J, T, bk, bo]`` deltas + mask-free ``{"wc", "idx"}`` params vs
+the dense ``[S, L, Kmax, N]`` baseline, reporting per-step latency and
+the exact bytes each layout holds (params + deltas).
 """
 from __future__ import annotations
 
@@ -24,11 +30,13 @@ import numpy as np
 
 from repro.core.snn import (SNNConfig, init_params, init_state,
                             init_stream_deltas, init_stream_state,
-                            make_train_fn)
+                            make_train_fn, serving_params)
 from repro.serving.adapt import make_chunk_fn
 
 BASE = SNNConfig(n_in=16, n_hidden=16, n_layers=2, n_out=4, t_steps=6)
 BACKENDS = ("ref", "pallas-interpret")
+
+CLI_FLAGS = "--density"
 
 
 def _time(fn, *args, reps=5):
@@ -81,6 +89,57 @@ def run(quick: bool = True):
     return rows
 
 
+def run_density(quick: bool = True):
+    """Chunk-step latency + exact bytes held, compact vs dense, per
+    N:M density. ``n_in = n_hidden = 32`` gives eighth-density
+    granularity (m = 8 per 4-group fan-in split)."""
+    densities = [0.125, 0.25, 0.5] if quick else [0.125, 0.25, 0.375,
+                                                  0.5, 0.75]
+    rng = np.random.default_rng(2)
+    rows = []
+    for density in densities:
+        cfg = dataclasses.replace(BASE, n_in=32, n_hidden=32,
+                                  sparsity=1.0 - density)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        evc = jnp.asarray((rng.random((cfg.t_steps, 4, cfg.n_in)) < 0.3)
+                          .astype(np.float32))
+        valid = jnp.ones((cfg.t_steps, 4), bool)
+        amask = jnp.ones((4,), bool)
+        state = init_stream_state(cfg, 4)
+        chunk = make_chunk_fn(cfg)
+
+        sp = serving_params(params, cfg)       # mask-free {"wc","idx",...}
+        dc = init_stream_deltas(cfg, 4, compact=True)
+        _, dt_c = _time(chunk, sp, dc, state, evc, valid, amask)
+        bytes_c = sum(int(np.asarray(v).nbytes) for v in sp.values()) \
+            + int(dc.nbytes)
+
+        dd = init_stream_deltas(cfg, 4, compact=False)
+        _, dt_d = _time(chunk, params, dd, state, evc, valid, amask)
+        bytes_d = sum(int(np.asarray(leaf).nbytes) for leaf in
+                      jax.tree_util.tree_leaves(params)) + int(dd.nbytes)
+
+        spec = cfg.spec(cfg.n_in)
+        rows.append({
+            "name": f"backend/density{spec.n / spec.m:.3f}",
+            "us_per_call": dt_c,
+            "derived": (f"dense_us={dt_d:.1f}"
+                        f" rel={dt_d / dt_c:.2f}"
+                        f" bytes={bytes_c}"
+                        f" dense_bytes={bytes_d}"
+                        f" delta_bytes={int(dc.nbytes)}"
+                        f" dense_delta_bytes={int(dd.nbytes)}"),
+        })
+    return rows
+
+
 if __name__ == "__main__":
-    for row in run(quick=True):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--density", action="store_true",
+                    help="sweep compact-vs-dense delta layouts over N:M "
+                         "densities (latency + exact bytes held)")
+    args = ap.parse_args()
+    rows = run_density(quick=False) if args.density else run(quick=True)
+    for row in rows:
         print(row)

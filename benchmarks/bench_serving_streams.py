@@ -39,6 +39,15 @@ the baseline and the configured mode plus their ratio; trajectories are
 bit-identical across all four combinations (pinned in
 ``tests/test_serving_pipeline.py``). A quick A/B pair also rides in the
 default ``run()`` rows.
+
+``--density quick|full`` A/Bs the compact ``[S, L, J, T, bk, bo]`` delta
+layout (the hot-path default — only kept N:M blocks are stored and the
+chunk jaxpr carries no dense mask) against the dense ``[S, L, Kmax, N]``
+baseline at each N:M density: events/s for both plus the **measured**
+weight-state footprint from the ``serving_bytes_held`` gauge. Compact
+delta bytes scale ~linearly with density (the paper's "3.8× reduced
+on-chip memory" analogue); dense bytes stay flat. A single quick pair
+also rides in the default ``run()`` rows.
 """
 from __future__ import annotations
 
@@ -62,14 +71,16 @@ CHUNK_LEN = 10
 # printed by ``benchmarks.run --dryrun`` so the module's focused CLI modes
 # are discoverable (and their registration can't rot silently)
 CLI_FLAGS = ("--devices N | --evolve EVERY | --pipeline on|off "
-             "| --factors on|off")
+             "| --factors on|off | --density quick|full")
 
 
 def _drive(n_streams: int, n_slots: int, n_windows: int, seed: int = 0,
            mesh=None, evolve_every: int = 0, merge_top: int = 2,
-           pipeline: int = 0, want_factors=None, tracer=None):
+           pipeline: int = 0, want_factors=None, tracer=None,
+           sparsity=None, compact=None):
     cfg = SNNConfig(n_in=N_IN, n_hidden=N_HIDDEN, n_layers=2, n_out=10,
-                    t_steps=T_STEPS)
+                    t_steps=T_STEPS,
+                    **({} if sparsity is None else {"sparsity": sparsity}))
     params = init_params(jax.random.PRNGKey(seed), cfg)
     task = make_task("gesture", n_in=N_IN, t_steps=T_STEPS, seed=seed)
     topo = None
@@ -78,7 +89,8 @@ def _drive(n_streams: int, n_slots: int, n_windows: int, seed: int = 0,
             epoch_every=evolve_every, merge_top=merge_top))
     sched = StreamScheduler(params, cfg, n_slots=n_slots, chunk_len=CHUNK_LEN,
                             mesh=mesh, topology=topo, pipeline_depth=pipeline,
-                            want_factors=want_factors, tracer=tracer)
+                            want_factors=want_factors, tracer=tracer,
+                            compact=compact)
     arrival = ArrivalConfig(min_chunk=4, max_chunk=CHUNK_LEN, mean_gap_s=1e-4)
     for sid in range(n_streams):
         sched.submit(StreamSession(
@@ -156,6 +168,51 @@ def run(quick: bool = True):
         })
     rows += run_evolve(quick=quick, frozen=frozen_baseline)
     rows += run_ab(quick=quick)
+    rows += run_density(quick=True, densities=[0.2])
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# --density: compact vs dense delta layout across N:M densities
+# ---------------------------------------------------------------------------
+
+def run_density(quick: bool = True, densities=None):
+    """Same workload in the compact ``[S, L, J, T, bk, bo]`` layout vs the
+    dense ``[S, L, Kmax, N]`` baseline at each N:M density. Reports
+    events/s for both (``rel`` >= 1.0 means compact does not regress) and
+    the *measured* weight-state footprint from the ``serving_bytes_held``
+    gauge — compact delta bytes must scale ~linearly with density while
+    the dense baseline stays flat."""
+    if densities is None:
+        densities = [0.125, 0.25, 0.5] if quick else [0.125, 0.2, 0.25,
+                                                      0.5, 0.75]
+    n_streams, n_slots, n_windows = (8, 8, 2) if quick else (32, 32, 2)
+    rows = []
+    for density in densities:
+        sparsity = 1.0 - density
+        dense = _drive(n_streams, n_slots, n_windows, sparsity=sparsity,
+                       compact=False)
+        comp = _drive(n_streams, n_slots, n_windows, sparsity=sparsity,
+                      compact=True)
+        rd, rc = dense.telemetry.rollup(), comp.telemetry.rollup()
+        bd, bc = dense.telemetry.bytes_held(), comp.telemetry.bytes_held()
+        spec = comp.cfg.spec(N_IN)
+        actual = spec.n / spec.m          # the realized N:M density
+        rel = rc["events_per_s"] / rd["events_per_s"] \
+            if rd["events_per_s"] else 0.0
+        rows.append({
+            "name": f"serving/density{actual:.3f}_streams{n_streams}",
+            "us_per_call": rc["p50_ms"] * 1e3,
+            "derived": (f"events/s={rc['events_per_s']:.0f}"
+                        f" dense_events/s={rd['events_per_s']:.0f}"
+                        f" rel={rel:.2f}"
+                        f" delta_bytes={bc['deltas']:.0f}"
+                        f" dense_delta_bytes={bd['deltas']:.0f}"
+                        f" param_bytes={bc['params']:.0f}"
+                        f" dense_param_bytes={bd['params']:.0f}"
+                        f" compiles={comp.n_compiles}"),
+            **_row_extras(comp),
+        })
     return rows
 
 
@@ -312,10 +369,18 @@ if __name__ == "__main__":
     ap.add_argument("--factors", choices=["on", "off"], default=None,
                     help="A/B compiling the DSST factor accumulators out of "
                          "the chunk scan (off) vs in (on)")
+    ap.add_argument("--density", choices=["quick", "full"], default=None,
+                    help="A/B the compact delta layout against the dense "
+                         "baseline across N:M densities (events/s + "
+                         "measured bytes held)")
     ap.add_argument("--_child", type=int, default=0, help=argparse.SUPPRESS)
     args = ap.parse_args()
     if args._child:
         _child_one_device_count(args._child)
+    elif args.density:
+        print("name,us_per_call,derived")
+        for row in run_density(quick=(args.density == "quick")):
+            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
     elif args.devices:
         print("name,us_per_call,derived")
         for row in run_devices_sweep(args.devices):

@@ -1,1 +1,2 @@
-from .checkpoint import save, restore, latest_step, list_steps  # noqa: F401
+from .checkpoint import (save, restore, peek, latest_step,  # noqa: F401
+                         list_steps)

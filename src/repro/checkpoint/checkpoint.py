@@ -115,6 +115,26 @@ def latest_step(base: str) -> Optional[int]:
     return None
 
 
+def peek(base: str, step: Optional[int] = None
+         ) -> Tuple[int, Dict[str, Tuple[Tuple[int, ...], str]], Dict]:
+    """Shapes/dtypes of a checkpoint's leaves without building a template.
+
+    Returns ``(step, {path_key: (shape, dtype_str)}, extra)``. What a
+    layout-migrating restore (e.g. the serving fleet's dense→compact delta
+    shim) reads first to decide which template to restore into.
+    """
+    if step is None:
+        step = latest_step(base)
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoint under {base}")
+    d = _step_dir(base, step)
+    with open(os.path.join(d, "manifest.json")) as f:
+        man = json.load(f)
+    with np.load(os.path.join(d, "arrays.npz")) as z:
+        shapes = {k: (tuple(z[k].shape), str(z[k].dtype)) for k in z.files}
+    return step, shapes, man["extra"]
+
+
 def restore(base: str, template: Any, step: Optional[int] = None
             ) -> Tuple[int, Any, Dict]:
     """Restore into the structure of ``template``. Returns (step, tree, extra)."""

@@ -201,20 +201,39 @@ def make_backend(cfg) -> Backend:
     raise ValueError(f"unknown backend {name!r}; expected one of {BACKENDS}")
 
 
-def prepare_weights(w_stacked, mask_stacked, cfg, backend: Backend):
+def prepare_weights(w_stacked, mask_stacked, cfg, backend: Backend, *,
+                    include_mask: bool = False):
     """Weight representation carried through the time scan.
 
-    ``ref``: the dense stacked weights themselves. Kernel backends: the
+    The rep is a dict whose *keys* drive dispatch downstream
+    (``"wc" in w_l`` → compact): ``ref`` carries the dense stacked weights
+    plus the dense float mask (``{"w", "mask_f"}`` — the mask is part of the
+    weight rep, not a separate scan input); kernel backends carry the
     compact N:M layout (values ``[L, J, T, bk, bo]`` + block ids
-    ``[L, J, T]``) built from the mask — "carried alongside the mask", as
-    the chip's value/index SRAM pair.
+    ``[L, J, T]``), the chip's value/index SRAM pair, with the dense mask
+    added only when ``include_mask`` (dense-delta serving still scatters
+    its WU through it).
     """
     if not backend.use_kernels:
-        return {"w": w_stacked}
+        return {"w": w_stacked, "mask_f": dense_masks(mask_stacked, cfg)}
+    wrep = compact_weights(w_stacked, mask_stacked, cfg)
+    if include_mask:
+        wrep["mask_f"] = dense_masks(mask_stacked, cfg)
+    return wrep
+
+
+def compact_weights(w_stacked, mask_stacked, cfg):
+    """Stacked dense weights + unit masks -> ``{"wc", "idx"}`` compact rep.
+
+    The mask-free serving weight rep: values ``[L, J, T, bk, bo]`` and kept
+    block ids ``[L, J, T]``. Requires uniform layer fan-in (the stacked
+    ``idx`` shares one geometry across layers).
+    """
     geo = geometry(cfg)
     if not geo.uniform:
-        raise ValueError("kernel backends require uniform layer fan-in "
-                         f"(got {geo.fanins}); use backend='ref'")
+        raise ValueError(
+            "the compact N:M layout requires uniform layer fan-in "
+            f"(got {geo.fanins}); use the dense rep / dense deltas instead")
     from repro.kernels.nm_spmm import ops as nm_ops
     spec = cfg.spec(geo.fanins[0])
     wcs, idxs = [], []
@@ -225,6 +244,32 @@ def prepare_weights(w_stacked, mask_stacked, cfg, backend: Backend):
         wcs.append(wc)
         idxs.append(idx)
     return {"wc": jnp.stack(wcs), "idx": jnp.stack(idxs)}
+
+
+def compact_deltas(deltas, idx, cfg):
+    """Dense slot-leading deltas ``[S, L, Kmax, N]`` -> compact
+    ``[S, L, J, T, bk, bo]`` by gathering the kept blocks of ``idx``
+    (``[L, J, T]``). Pure gather — bitwise for every kept coordinate."""
+    spec = cfg.spec(cfg.layer_fanins[0])
+    bk, bo = spec.block, spec.out_tile
+    s, l_, k, n = deltas.shape
+    db = deltas.reshape(s, l_, k // bk, bk, n // bo, bo)
+    db = db.transpose(0, 1, 4, 2, 3, 5)            # [S, L, J, KB, bk, bo]
+    return jnp.take_along_axis(db, idx[None, :, :, :, None, None], axis=3)
+
+
+def densify_deltas(deltas_c, idx, cfg):
+    """Compact slot-leading deltas ``[S, L, J, T, bk, bo]`` -> dense
+    ``[S, L, Kmax, N]`` (zeros at pruned coordinates). Pure scatter into
+    disjoint block rows — bitwise for every kept coordinate."""
+    geo = geometry(cfg)
+    s, l_, j, t, bk, bo = deltas_c.shape
+    kb = geo.k_max // bk
+    li = jnp.arange(l_)[:, None, None]
+    ji = jnp.arange(j)[None, :, None]
+    db = jnp.zeros((s, l_, j, kb, bk, bo), deltas_c.dtype)
+    db = db.at[:, li, ji, idx].add(deltas_c)       # disjoint ids: exact set
+    return db.transpose(0, 1, 3, 4, 2, 5).reshape(s, l_, geo.k_max, j * bo)
 
 
 def compact_kept(cfg) -> int:
@@ -245,14 +290,26 @@ def finalize_weights(wrep, cfg, backend: Backend) -> jax.Array:
 
 
 def fwd_current(backend: Backend, pre, w_l, delta_l):
-    """Forward synaptic current for one layer: ``pre @ w`` (+ slot deltas)."""
-    if backend.use_kernels:
+    """Forward synaptic current for one layer: ``pre @ w`` (+ slot deltas).
+
+    Dispatch is on the weight rep's keys: a compact rep (``"wc"``) routes
+    through ``nm_spmm`` regardless of backend (the jnp reference off-TPU),
+    and compact per-slot deltas (rank 5: ``[S, J, T, bk, bo]``) contract
+    through ``nm_spmm_deltas`` on the same kept-block ids — no dense
+    ``[K, N]`` tensor exists anywhere on this path.
+    """
+    if "wc" in w_l:
         from repro.kernels.nm_spmm import ops as nm_ops
         cur = nm_ops.nm_spmm_batched(pre, w_l["wc"], w_l["idx"],
                                      interpret=backend.interpret,
                                      force_pallas=backend.force_pallas)
-    else:
-        cur = pre @ w_l["w"]
+        if delta_l is not None:
+            if delta_l.ndim == 5:
+                cur = cur + nm_ops.nm_spmm_deltas(pre, delta_l, w_l["idx"])
+            else:
+                cur = cur + jnp.einsum("sk,skn->sn", pre, delta_l)
+        return cur
+    cur = pre @ w_l["w"]
     if delta_l is not None:
         cur = cur + jnp.einsum("sk,skn->sn", pre, delta_l)
     return cur
@@ -271,18 +328,22 @@ def lif(backend: Backend, cfg, v, tr, current):
                     theta=cfg.theta)
 
 
-def train_wu(backend: Backend, cfg, w_l, pre_trace, mod, scale, mask_f):
-    """Gated three-factor WU into the base weights (training path)."""
-    if backend.use_kernels:
+def train_wu(backend: Backend, cfg, w_l, pre_trace, mod, scale):
+    """Gated three-factor WU into the base weights (training path).
+
+    The sparsity pattern comes from the weight rep itself: kept block ids
+    for the compact rep, the dense float mask (``w_l["mask_f"]``) for ref.
+    """
+    if "wc" in w_l:
         from repro.kernels.wu_outer import ops as wu_ops
         spec = cfg.spec(cfg.layer_fanins[0])
         dwc = wu_ops.wu_outer(pre_trace, mod, w_l["idx"], scale,
                               bk=spec.block, bo=spec.out_tile,
                               interpret=backend.interpret,
                               force_pallas=backend.force_pallas)
-        return {"wc": w_l["wc"] + dwc, "idx": w_l["idx"]}
+        return {**w_l, "wc": w_l["wc"] + dwc}
     dw = scale * (pre_trace.T @ mod)
-    return {"w": w_l["w"] + dw * mask_f}
+    return {**w_l, "w": w_l["w"] + dw * w_l["mask_f"]}
 
 
 # ---------------------------------------------------------------------------
@@ -290,15 +351,20 @@ def train_wu(backend: Backend, cfg, w_l, pre_trace, mod, scale, mask_f):
 # ---------------------------------------------------------------------------
 
 class LayerSlice(NamedTuple):
-    """Per-layer xs of the layer scan (leading ``[L]`` axis before slicing)."""
+    """Per-layer xs of the layer scan (leading ``[L]`` axis before slicing).
+
+    There is no dense-mask field: the sparsity pattern lives inside the
+    weight rep ``w`` (kept block ids for compact, ``mask_f`` for dense), so
+    a compact serving trace never holds a dense mask at all.
+    """
     w: Any                                # weight rep (see prepare_weights)
-    mask_f: jax.Array                     # [Kmax, N] dense float mask
     readout: jax.Array                    # [N, n_out] bypass readout
     st: LayerState                        # leaves [R, N]
     ss_mean: jax.Array                    # [] (train) or [S] (serve)
     gate_opened: Optional[jax.Array]      # [] train telemetry; None serving
     gate_offered: Optional[jax.Array]
-    delta: Optional[jax.Array]            # [S, Kmax, N] serving; None train
+    delta: Optional[jax.Array]            # serving: [S, J, T, bk, bo] compact
+    #   or [S, Kmax, N] dense; None in training
     fanin: jax.Array                      # [] f32 — true fan-in (pre padding)
     density: jax.Array                    # [] f32 — spec density
 
@@ -368,9 +434,20 @@ def _layer_timestep(cfg, backend: Backend, geo: Geometry, learn: bool,
     wu_on = open_ & (t_row >= t_wu) & jnp.asarray(learn)
 
     if serving:
-        scale = jnp.where(wu_on, cfg.lr, 0.0)[:, None, None]
-        dw = scale * pre_tr[:, :, None] * mod[:, None, :]
-        delta_new = xs.delta + dw * xs.mask_f[None]
+        if xs.delta.ndim == 5:
+            # compact per-slot WU: the outer product lands only in kept
+            # blocks — sparse in compute AND storage (the paper's
+            # activity-dependent sparse WU)
+            from repro.kernels.wu_outer import ops as wu_ops
+            spec = cfg.spec(geo.fanins[0])
+            scale = jnp.where(wu_on, cfg.lr, 0.0)
+            delta_new = xs.delta + wu_ops.wu_outer_slots(
+                pre_tr, mod, xs.w["idx"], scale,
+                bk=spec.block, bo=spec.out_tile)
+        else:
+            scale = jnp.where(wu_on, cfg.lr, 0.0)[:, None, None]
+            dw = scale * pre_tr[:, :, None] * mod[:, None, :]
+            delta_new = xs.delta + dw * xs.w["mask_f"][None]
         w_new, opened_new, offered_new = xs.w, None, None
         if factors:
             # DSST factors for the live topology service: per-slot activity
@@ -383,7 +460,7 @@ def _layer_timestep(cfg, backend: Backend, geo: Geometry, learn: bool,
             pre_mag = post_mag = None   # frozen fleet: factors compiled out
     else:
         scale = jnp.where(wu_on, cfg.lr / pre.shape[0], 0.0)
-        w_new = train_wu(backend, cfg, xs.w, pre_tr, mod, scale, xs.mask_f)
+        w_new = train_wu(backend, cfg, xs.w, pre_tr, mod, scale)
         delta_new = None
         opened_new = xs.gate_opened + open_.astype(jnp.float32)
         offered_new = xs.gate_offered + 1.0
@@ -435,7 +512,7 @@ def _windows(cfg) -> Tuple[int, int]:
 # time scans: training (aligned sample) and serving (chunked streams)
 # ---------------------------------------------------------------------------
 
-def scan_sample(wrep, masks_f, readout, layers: LayerState, x_tr, gate,
+def scan_sample(wrep, readout, layers: LayerState, x_tr, gate,
                 events, cfg, backend: Backend, learn: bool):
     """T aligned timesteps over the layer stack (training datapath).
 
@@ -457,7 +534,7 @@ def scan_sample(wrep, masks_f, readout, layers: LayerState, x_tr, gate,
             logits=jnp.zeros((x.shape[0], readout.shape[-1])),
             sop_fwd=jnp.zeros(x.shape[0]), sop_wu=jnp.zeros(x.shape[0]),
             sop_wu_off=jnp.zeros(x.shape[0]), loss=jnp.zeros(x.shape[0]))
-        xs = LayerSlice(w=wrep, mask_f=masks_f, readout=readout, st=layers,
+        xs = LayerSlice(w=wrep, readout=readout, st=layers,
                         ss_mean=gate.ss_mean, gate_opened=gate.opened,
                         gate_offered=gate.offered, delta=None,
                         fanin=fan, density=dens)
@@ -478,7 +555,7 @@ def scan_sample(wrep, masks_f, readout, layers: LayerState, x_tr, gate,
     return wrep, layers, x_tr, gate, outs
 
 
-def scan_chunk(wrep, masks_f, readout, deltas, layers: LayerState, x_tr,
+def scan_chunk(wrep, readout, deltas, layers: LayerState, x_tr,
                ss_mean, t_win, samp, events, valid, cfg, backend: Backend,
                learn: bool, want_factors: bool = True):
     """Up to C timesteps of S independent streams (serving datapath).
@@ -486,6 +563,10 @@ def scan_chunk(wrep, masks_f, readout, deltas, layers: LayerState, x_tr,
     Engine layout: layer axis leading on ``layers``/``deltas``/``ss_mean``
     (``[L, S, ...]``); the public slot-leading layout is transposed at the
     ``run_chunk`` boundary. Returns (deltas', state pieces, outs).
+
+    A compact ``wrep`` (``{"wc", "idx"}``) with compact deltas
+    (``[L, S, J, T, bk, bo]``) is the serving default: the trace then holds
+    no dense mask and no dense ``[·, K, N]`` delta leaf at all.
 
     With ``want_factors`` (static bool) the carry also accumulates per-slot
     DSST activity factors (``acc_pre [L, S, Kmax]``, ``acc_post [L, S, N]``)
@@ -515,7 +596,7 @@ def scan_chunk(wrep, masks_f, readout, deltas, layers: LayerState, x_tr,
             logits=jnp.zeros((S, readout.shape[-1])),
             sop_fwd=jnp.zeros(S), sop_wu=jnp.zeros(S),
             sop_wu_off=jnp.zeros(S), loss=jnp.zeros(S))
-        xs = LayerSlice(w=wrep, mask_f=masks_f, readout=readout, st=layers,
+        xs = LayerSlice(w=wrep, readout=readout, st=layers,
                         ss_mean=ss_mean, gate_opened=None, gate_offered=None,
                         delta=dls, fanin=fan, density=dens)
         lc, ys = jax.lax.scan(partial(body, t_w, val), lc0, xs)

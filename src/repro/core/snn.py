@@ -177,11 +177,10 @@ def run_sample(
     backend = engine.make_backend(cfg)
     t_wu = int(cfg.t_steps * cfg.wu_start_frac)
     masks = params["hidden"]["mask"]
-    masks_f = engine.dense_masks(masks, cfg)
     wrep = engine.prepare_weights(params["hidden"]["w"], masks, cfg, backend)
 
     wrep, layers, x_tr, gate_st, outs = engine.scan_sample(
-        wrep, masks_f, params["readout"], state.layers, state.x_tr,
+        wrep, params["readout"], state.layers, state.x_tr,
         state.gate, events, cfg, backend, learn)
     w_stacked = engine.finalize_weights(wrep, cfg, backend)
 
@@ -304,11 +303,43 @@ def init_stream_state(cfg: SNNConfig, n_slots: int) -> StreamState:
     )
 
 
-def init_stream_deltas(cfg: SNNConfig, n_slots: int) -> jax.Array:
-    """Per-stream weight deltas over the frozen shared base: one stacked
-    ``[S, L, Kmax, n_hidden]`` tensor (slot axis leads for lane surgery)."""
+def init_stream_deltas(cfg: SNNConfig, n_slots: int,
+                       compact: Optional[bool] = None) -> jax.Array:
+    """Per-stream weight deltas over the frozen shared base (slot axis
+    leads for lane surgery).
+
+    Default (``compact=None``) is layout auto-selection: the compact N:M
+    tensor ``[S, L, J, T, bk, bo]`` — storage scales with density, not
+    ``K·N`` — whenever the layer geometry is uniform, else the dense
+    ``[S, L, Kmax, n_hidden]`` fallback. Pass ``compact=False`` to force
+    the dense baseline layout (the A/B reference path).
+    """
     geo = engine.geometry(cfg)
+    if compact is None:
+        compact = geo.uniform
+    if compact:
+        if not geo.uniform:
+            raise ValueError(
+                "compact stream deltas require uniform layer fan-in "
+                f"(got {geo.fanins}); pass compact=False")
+        spec = cfg.spec(geo.fanins[0])
+        jj = cfg.n_hidden // spec.out_tile
+        return jnp.zeros((n_slots, cfg.n_layers, jj, engine.compact_kept(cfg),
+                          spec.block, spec.out_tile))
     return jnp.zeros((n_slots, cfg.n_layers, geo.k_max, cfg.n_hidden))
+
+
+def serving_params(params: Dict[str, Any], cfg: SNNConfig) -> Dict[str, Any]:
+    """Dense training params -> the mask-free serving weight rep.
+
+    ``{"wc" [L,J,T,bk,bo], "idx" [L,J,T], "readout" [L,N,n_out]}`` — what a
+    compact-mode :func:`run_chunk` consumes. Built on the host (outside
+    jit) at fleet construction and at topology epoch boundaries, so neither
+    the dense weights nor the dense mask ever enter the serving jaxpr.
+    """
+    wrep = engine.compact_weights(params["hidden"]["w"],
+                                  params["hidden"]["mask"], cfg)
+    return {**wrep, "readout": params["readout"]}
 
 
 class ChunkMetrics(NamedTuple):
@@ -344,7 +375,7 @@ def _to_engine(tree):
 
 def run_chunk(
     params: Dict[str, Any],
-    deltas: jax.Array,          # [S, L, Kmax, n_hidden]
+    deltas: jax.Array,          # compact [S,L,J,T,bk,bo] | dense [S,L,Kmax,N]
     state: StreamState,
     events: jax.Array,          # [C, S, n_in] binary spikes
     valid: jax.Array,           # [C, S] bool — ragged chunks / idle slots
@@ -356,8 +387,13 @@ def run_chunk(
     """Advance S independent streams by up to C timesteps each.
 
     Args:
-      params:  frozen shared base — stacked ``hidden/{w,mask}`` + readout.
-      deltas:  per-stream adaptation ``[S, L, Kmax, n_hidden]`` (slot-leading).
+      params:  frozen shared base — either the dense training layout
+        (stacked ``hidden/{w,mask}`` + readout) or the mask-free serving
+        rep from :func:`serving_params` (``{"wc", "idx", "readout"}``).
+      deltas:  per-stream adaptation, slot-leading — compact
+        ``[S, L, J, T, bk, bo]`` (the hot-path default) or dense
+        ``[S, L, Kmax, n_hidden]`` (the A/B baseline); the layout is
+        inferred from the rank.
       state:   carried :class:`StreamState` (slot-leading leaves).
       events:  ``[C, S, n_in]`` binary spikes.
       valid:   ``[C, S]`` bool — ragged chunks / idle slots are exact no-ops.
@@ -366,17 +402,34 @@ def run_chunk(
         accumulators out of the chunk scan and returns them as ``None`` —
         the right mode for fleets whose topology never evolves.
 
+    With compact deltas the whole chunk runs on the compact layout: the
+    forward current goes through ``nm_spmm``, the per-stream WU scatters
+    only into kept blocks, and no dense mask or ``[S, L, K, N]`` leaf
+    appears in the jaxpr (asserted by ``tests/test_compact_serving.py``).
+
     Returns ``(deltas', state', metrics)``: same shapes/dtypes in and out,
     so the caller can jit once and stream forever.
     """
     backend = engine.make_backend(cfg)
-    masks = params["hidden"]["mask"]
-    masks_f = engine.dense_masks(masks, cfg)
-    wrep = engine.prepare_weights(params["hidden"]["w"], masks, cfg, backend)
+    compact = deltas.ndim == 6
+    if "wc" in params:               # mask-free serving rep
+        if not compact:
+            raise ValueError("the mask-free serving params carry no dense "
+                             "mask, so dense [S, L, K, N] deltas cannot be "
+                             "applied; use compact deltas "
+                             "(init_stream_deltas default)")
+        wrep = {"wc": params["wc"], "idx": params["idx"]}
+    else:
+        masks = params["hidden"]["mask"]
+        if compact:
+            wrep = engine.compact_weights(params["hidden"]["w"], masks, cfg)
+        else:
+            wrep = engine.prepare_weights(params["hidden"]["w"], masks, cfg,
+                                          backend, include_mask=True)
 
     (layers, x_tr, ss_mean, t_win, samp, dls, *accs), outs = \
         engine.scan_chunk(
-            wrep, masks_f, params["readout"], _to_engine(deltas),
+            wrep, params["readout"], _to_engine(deltas),
             _to_engine(state.layers), state.x_tr, state.ss_mean.T,
             state.t_in_window, state.sample_idx, events, valid, cfg, backend,
             learn, want_factors)

@@ -196,15 +196,56 @@ def survivors_dense(old_mask: jax.Array, new_mask: jax.Array, cfg,
     return dense_masks(old_mask & new_mask, cfg, dtype=dtype)
 
 
+def stacked_kept_ids(mask_stacked: jax.Array, cfg) -> jax.Array:
+    """Stacked kept-block ids ``[L, J, T]`` — the same argsort convention as
+    ``kernels/nm_spmm.make_compact`` (ascending kept block ids per out
+    tile), so ids derived here address compact tensors built there.
+    Uniform geometry only (one ``T`` shared by every layer)."""
+    if not uniform_geometry(cfg):
+        raise ValueError("stacked kept ids require uniform layer fan-in "
+                         f"(got {tuple(cfg.layer_fanins)})")
+    spec = cfg.spec(cfg.layer_fanins[0])
+    kb, _ = spec.unit_counts(cfg.layer_fanins[0], cfg.n_hidden)
+    t = (kb // spec.m) * spec.n
+    idx = jnp.argsort(~mask_stacked, axis=1, stable=True)[:, :t, :]
+    return idx.transpose(0, 2, 1).astype(jnp.int32)           # [L, J, T]
+
+
+def project_deltas_compact(deltas_c: jax.Array, old_ids: jax.Array,
+                           new_ids: jax.Array) -> jax.Array:
+    """Remap compact per-stream deltas ``[S, L, J, T, bk, bo]`` from the old
+    topology's kept-block ids to the new one's (both ``[L, J, T]``).
+
+    A pure gather: every new slot that addresses a surviving block copies
+    the old slot's bits unchanged; regrown blocks start at zero. No dense
+    tensor is ever built — the epoch-boundary analogue of the mask-free
+    hot path.
+    """
+    eq = new_ids[..., :, None] == old_ids[..., None, :]       # [L, J, T, T]
+    hit = eq.any(-1)                                          # [L, J, T]
+    pos = jnp.argmax(eq, axis=-1)                             # [L, J, T]
+    gathered = jnp.take_along_axis(
+        deltas_c, pos[None, :, :, :, None, None], axis=3)
+    return jnp.where(hit[None, :, :, :, None, None], gathered,
+                     jnp.zeros((), deltas_c.dtype))
+
+
 def project_deltas(deltas: jax.Array, old_mask: jax.Array,
                    new_mask: jax.Array, cfg) -> jax.Array:
-    """Remap the per-stream delta tensor ``[S, L, Kmax, N]`` across a mask
-    change: surviving connections keep their values bit-exactly, pruned and
-    regrown coordinates go to zero (regrown restart clean, as on-chip).
+    """Remap the per-stream delta tensor across a mask change: surviving
+    connections keep their values bit-exactly, pruned and regrown
+    coordinates go to zero (regrown restart clean, as on-chip).
 
-    ``jnp.where`` (not a mask multiply) so survivors are the identical bits
-    — the acceptance property of the zero-recompile topology swap.
+    Dispatches on layout: compact ``[S, L, J, T, bk, bo]`` deltas remap by
+    a kept-block-id gather (no dense tensor materialised); dense
+    ``[S, L, Kmax, N]`` deltas use a ``jnp.where`` against the dense
+    survivor mask (not a mask multiply) so survivors are the identical
+    bits — the acceptance property of the zero-recompile topology swap.
     """
+    if deltas.ndim == 6:
+        return project_deltas_compact(deltas,
+                                      stacked_kept_ids(old_mask, cfg),
+                                      stacked_kept_ids(new_mask, cfg))
     surv = survivors_dense(old_mask, new_mask, cfg)           # [L, Kmax, N]
     return jnp.where(surv[None], deltas, jnp.zeros((), deltas.dtype))
 

@@ -77,11 +77,37 @@ def make_compact(w_dense: jax.Array, unit_mask: jax.Array, bk: int, bo: int,
     k, o = w_dense.shape
     kb, j = unit_mask.shape
     assert kb == k // bk and j == o // bo
-    t = int(unit_mask[:, 0].sum()) if n_kept is None else n_kept
+    if n_kept is None:
+        if isinstance(unit_mask, jax.core.Tracer):
+            raise ValueError(
+                "make_compact: unit_mask is a traced value, so the kept-block "
+                "count cannot be read off it at trace time. Pass n_kept=... "
+                "explicitly — it is static from the N:M spec "
+                "(G·n, i.e. engine.compact_kept(cfg)).")
+        t = int(unit_mask[:, 0].sum())
+    else:
+        t = n_kept
     idx = jnp.argsort(~unit_mask, axis=0, stable=True)[:t].T.astype(jnp.int32)  # [J, T]
     wb = w_dense.reshape(kb, bk, j, bo).transpose(2, 0, 1, 3)  # [J, KB, bk, bo]
     w_compact = jnp.take_along_axis(wb, idx[:, :, None, None], axis=1)
     return w_compact, idx
+
+
+def nm_spmm_deltas(x, delta_compact, idx):
+    """Per-slot compact delta matmul: ``y[s] = x[s] @ densify(delta[s])``.
+
+    ``x [S, K]`` with per-slot compact deltas ``[S, J, T, bk, bo]`` sharing
+    one ``idx [J, T]`` (every stream lives on the fleet's topology). The
+    gather mirrors ``ref.nm_spmm``; only the batch axis rides along on the
+    weight operand. Used by the serving hot path so the per-stream delta
+    current never round-trips through a dense ``[K, N]`` tensor.
+    """
+    s, k = x.shape
+    _, j, t, bk, bo = delta_compact.shape
+    xb = x.reshape(s, k // bk, bk)
+    xg = xb[:, idx, :]                                      # [S, J, T, bk]
+    y = jnp.einsum("sjtk,sjtko->sjo", xg, delta_compact)
+    return y.reshape(s, j * bo)
 
 
 def nm_spmm_batched(x, w_compact, idx, *, interpret: bool = False,

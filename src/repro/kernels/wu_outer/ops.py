@@ -22,3 +22,17 @@ def wu_outer(pre, mod, idx, scale, *, bk: int, bo: int,
         mod = jnp.pad(mod, ((0, pad), (0, 0)))
     return wu_outer_pallas(pre, mod, idx, scale, bk=bk, bo=bo, bb=bb,
                            interpret=interpret or jax.default_backend() != "tpu")
+
+
+def wu_outer_slots(pre, mod, idx, scale, *, bk: int, bo: int,
+                   interpret: bool = False, force_pallas: bool = False):
+    """Per-slot compact WU: each slot keeps its own ``[J, T, bk, bo]`` update.
+
+    jnp-only for now — the per-slot variant has no batch reduction so it is
+    bandwidth-bound; a TPU mapping would vmap the WU kernel over slots.
+    ``interpret``/``force_pallas`` are accepted for signature parity with
+    ``wu_outer`` and ignored.
+    """
+    del interpret, force_pallas
+    scale = jnp.asarray(scale, pre.dtype)
+    return ref.wu_outer_slots(pre, mod, idx, scale, bk, bo)

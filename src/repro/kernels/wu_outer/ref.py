@@ -21,3 +21,25 @@ def wu_outer(pre: jax.Array, mod: jax.Array, idx: jax.Array, scale: jax.Array,
     pg = preb[:, idx, :]                                    # [B, J, T, bk]
     modt = mod.reshape(b, j, bo)
     return scale * jnp.einsum("bjtk,bjo->jtko", pg, modt)
+
+
+def wu_outer_slots(pre: jax.Array, mod: jax.Array, idx: jax.Array,
+                   scale: jax.Array, bk: int, bo: int) -> jax.Array:
+    """Per-slot compact outer-product update ``[S, J, T, bk, bo]``.
+
+    Unlike ``wu_outer`` (which batch-sums into one shared ``dw_compact``,
+    the training shape), every slot keeps its own update — the serving
+    per-stream delta rule. ``scale [S]`` carries the per-slot gate×lr.
+
+    The multiply association mirrors the dense serving rule
+    ``(scale · pre) · mod`` elementwise, so at every kept coordinate the
+    update is **bitwise identical** to the dense-delta path's
+    ``scale[:,None,None] * pre[:,:,None] * mod[:,None,:]``.
+    """
+    s, k = pre.shape
+    j, t = idx.shape
+    preb = pre.reshape(s, k // bk, bk)
+    pg = preb[:, idx, :]                                    # [S, J, T, bk]
+    modt = mod.reshape(s, j, bo)
+    return ((scale[:, None, None, None] * pg)[..., None]
+            * modt[:, :, None, None, :])

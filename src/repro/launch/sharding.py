@@ -224,11 +224,14 @@ def replicated(mesh: Mesh) -> NamedSharding:
 #
 # The SNN serving chunk step is per-slot separable — every per-stream
 # quantity is a single slot-leading array (``StreamState`` leaves, the
-# ``[S, L, K, N]`` delta tensor, the ``[S]`` adapt mask) or carries the slot
+# compact ``[S, L, J, T, bk, bo]`` delta tensor — or its dense
+# ``[S, L, Kmax, N]`` baseline; ``slot_spec(0)`` is a rank-agnostic prefix
+# so both share one rule — and the ``[S]`` adapt mask) or carries the slot
 # axis second (the ``[C, S, n_in]`` event and ``[C, S]`` valid staging
 # buffers). Sharding is therefore one rule applied twice: "slots" on the
 # slot axis, everything else replicated. The frozen base params replicate —
-# they are read-only under serving and small next to the delta grid.
+# under the compact hot path that is the ``{"wc", "idx", "readout"}`` exec
+# rep, read-only and small next to the delta grid.
 
 SLOT_AXIS = "slots"
 

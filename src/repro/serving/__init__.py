@@ -7,6 +7,7 @@ per-stream/fleet energy telemetry. See ``docs/ARCHITECTURE.md`` /
 ``docs/SERVING.md`` and the modules' docstrings for the architecture.
 """
 from .adapt import AdaptConfig, delta_norms, make_chunk_fn, merge_lane_into_base
+from .checkpointing import restore_fleet, save_fleet
 from .scheduler import StreamScheduler
 from .session import (SessionStatus, StreamSession, WindowPrediction,
                       fresh_lane_state, read_lane, reset_lane, write_lane)
@@ -23,5 +24,5 @@ __all__ = [
     "TaskStreamSource", "TopologyEpochEvent", "TopologyService",
     "TopologyServiceConfig", "WindowPrediction", "delta_norms",
     "fresh_lane_state", "make_chunk_fn", "merge_lane_into_base", "read_lane",
-    "reset_lane", "write_lane",
+    "reset_lane", "restore_fleet", "save_fleet", "write_lane",
 ]

@@ -1,9 +1,13 @@
 """Per-stream online OSSL adaptation under serving load.
 
 Parameter layout: a **frozen shared base** (the trained weights every
-stream serves from) plus ONE stacked **per-stream delta** tensor,
-``[n_slots, n_layers, Kmax, n_hidden]`` (slot axis leading, layer axis
-stacked — the engine layout since PR 2). Each slot's effective weights are
+stream serves from) plus ONE stacked **per-stream delta** tensor, slot
+axis leading, layer axis stacked. The hot-path layout is the compact N:M
+tensor ``[n_slots, n_layers, J, T, bk, bo]`` (only kept blocks are
+stored — delta memory scales with density); the dense
+``[n_slots, n_layers, Kmax, n_hidden]`` layout remains as the A/B
+baseline, selected by the rank of whatever ``deltas`` the caller passes.
+Each slot's effective weights are
 ``w_base + delta[slot]``; the activity-dependent gating engine (per-stream
 IA/SS thresholds inside ``core.snn.run_chunk``) decides when a stream's
 delta absorbs a three-factor OSSL update. A silent or repetitive stream
@@ -93,7 +97,7 @@ def make_chunk_fn(cfg: SNNConfig, adapt: AdaptConfig | None = None,
         new_deltas, new_state, metrics = run_chunk(
             params, deltas, state, events, valid, scfg, learn=adapt.enabled,
             want_factors=want_factors)
-        d = new_deltas                           # [S, L, Kmax, N]
+        d = new_deltas                           # [S, L, ...] either layout
         if adapt.delta_decay < 1.0:
             d = d * adapt.delta_decay
         if adapt.delta_clip > 0.0:
@@ -101,7 +105,7 @@ def make_chunk_fn(cfg: SNNConfig, adapt: AdaptConfig | None = None,
         # decay/clip only touch lanes that processed valid timesteps this
         # chunk; frozen AND idle lanes keep their old delta bit-exactly
         live = adapt_mask & valid.any(0)         # [S]
-        out = jnp.where(live[:, None, None, None], d, deltas)
+        out = jnp.where(live.reshape((-1,) + (1,) * (d.ndim - 1)), d, deltas)
         # a frozen lane is not billed for weight updates — and is not
         # *offered* any either, or its wu_skip_rate reads a fake 100%
         metrics = metrics._replace(
@@ -148,22 +152,32 @@ def make_chunk_fn(cfg: SNNConfig, adapt: AdaptConfig | None = None,
 def delta_norms(deltas: jax.Array) -> jax.Array:
     """Per-slot L2 norm of the adaptation, summed over layers. [S].
 
-    ``deltas``: the stacked ``[S, L, Kmax, N]`` per-stream tensor.
+    ``deltas``: the stacked slot-leading per-stream tensor, compact
+    ``[S, L, J, T, bk, bo]`` or dense ``[S, L, Kmax, N]``. Compact storage
+    holds only kept coordinates and dense deltas are zero off-mask, so the
+    two layouts report the same norms.
     """
-    return jnp.sqrt((deltas * deltas).sum((2, 3))).sum(1)
+    sq = (deltas * deltas).sum(axis=tuple(range(2, deltas.ndim)))
+    return jnp.sqrt(sq).sum(1)
 
 
 def merge_lane_into_base(params: Dict[str, Any], deltas: jax.Array, slot: int,
                          cfg: SNNConfig, weight: float = 1.0) -> Dict[str, Any]:
-    """Fold stream ``slot``'s delta into the shared base weights.
+    """Fold stream ``slot``'s delta into the shared base weights — mask-free.
 
-    The N:M mask is re-applied so the base stays sparse (deltas are already
-    mask-projected at update time; this re-asserts the invariant exactly).
-    Only ``hidden/w`` is rebuilt — every other key in ``params`` (present or
-    added by a future PR) rides through the generic dict update untouched,
-    instead of being silently dropped by a hand-rolled rebuild.  The serving
+    No dense mask is rebuilt: a compact lane scatters its kept blocks into
+    the base (pruned coordinates untouched — the base is exactly zero there
+    by the topology invariant), and a dense lane is zero off-mask by the
+    same invariant, so a plain add preserves base sparsity bit-exactly
+    (the TopologyService fold-exactness property). Only ``hidden/w`` is
+    rebuilt — every other key in ``params`` (present or added by a future
+    PR) rides through the generic dict update untouched. The serving
     topology service reuses this as its fold-hot-streams step.
     """
-    masks_f = engine.dense_masks(params["hidden"]["mask"], cfg)
-    w = (params["hidden"]["w"] + weight * deltas[slot]) * masks_f
+    lane = deltas[slot]
+    if lane.ndim == 5:               # compact [L, J, T, bk, bo]
+        from repro.core import topology as topology_lib
+        idx = topology_lib.stacked_kept_ids(params["hidden"]["mask"], cfg)
+        lane = engine.densify_deltas(lane[None], idx, cfg)[0]
+    w = params["hidden"]["w"] + weight * lane
     return {**params, "hidden": {**params["hidden"], "w": w}}

@@ -1,0 +1,85 @@
+"""Fleet checkpointing in the compact delta layout, with migration.
+
+``save_fleet`` snapshots one serving fleet's weight state — canonical dense
+``params`` plus the per-stream delta tensor in whatever layout the fleet
+runs (compact ``[S, L, J, T, bk, bo]`` on the default hot path, dense
+``[S, L, Kmax, N]`` for the baseline) and the carried ``StreamState`` —
+through the atomic keep-K ``repro.checkpoint`` layer.
+
+``restore_fleet`` is layout-migrating: it ``checkpoint.peek``\\ s the stored
+delta leaf's rank first, restores into a matching template, and — when a
+pre-compact checkpoint (dense rank-4 deltas) is restored into a compact
+fleet — gathers the kept blocks through the restored mask's own
+``stacked_kept_ids``. The gather is the same one the live projection uses,
+so migrated deltas are bit-exact at every kept coordinate (off-mask dense
+entries are zero by the topology invariant and carry no information).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.checkpoint import checkpoint
+from repro.core import engine
+from repro.core import topology as topology_lib
+from repro.core.snn import (SNNConfig, StreamState, init_stream_deltas,
+                            init_stream_state)
+
+_DENSE_DELTA_RANK = 4      # [S, L, Kmax, N] — the pre-compact layout
+
+
+def _fleet_tree(params, deltas, state: StreamState):
+    return {"params": params, "deltas": deltas, "state": state}
+
+
+def save_fleet(base: str, step: int, params: Dict[str, Any],
+               deltas: jax.Array, state: StreamState,
+               extra: Optional[Dict] = None, keep: int = 3) -> str:
+    """Checkpoint one fleet's ``(params, deltas, state)`` at ``step``.
+
+    ``deltas`` are stored in their native layout — compact fleets persist
+    compact tensors (the on-disk footprint scales with density too).
+    """
+    extra = dict(extra or {})
+    extra["n_slots"] = int(deltas.shape[0])
+    extra["delta_layout"] = "compact" if deltas.ndim == 6 else "dense"
+    return checkpoint.save(base, step, _fleet_tree(params, deltas, state),
+                           extra=extra, keep=keep)
+
+
+def restore_fleet(base: str, cfg: SNNConfig, step: Optional[int] = None,
+                  compact: Optional[bool] = None
+                  ) -> Tuple[int, Dict[str, Any], jax.Array, StreamState,
+                             Dict]:
+    """Restore ``(step, params, deltas, state, extra)``, migrating layout.
+
+    ``compact`` picks the layout the *caller's fleet* runs (None = the
+    ``init_stream_deltas`` auto default). A dense-stored checkpoint
+    restored into a compact fleet is migrated by ``engine.compact_deltas``
+    over the restored mask's kept-block ids; a compact-stored checkpoint
+    restored into a dense fleet densifies the same way. Same-layout
+    restores are the checkpoint layer's usual bitwise round trip.
+    """
+    step, shapes, _ = checkpoint.peek(base, step)
+    stored_rank = len(shapes["deltas"][0])
+    n_slots = shapes["deltas"][0][0]
+    stored_compact = stored_rank != _DENSE_DELTA_RANK
+
+    from repro.core.snn import init_params
+    template = _fleet_tree(
+        init_params(jax.random.PRNGKey(0), cfg),
+        init_stream_deltas(cfg, n_slots, compact=stored_compact),
+        init_stream_state(cfg, n_slots))
+    step, tree, extra = checkpoint.restore(base, template, step=step)
+    params, deltas = tree["params"], tree["deltas"]
+
+    want_compact = engine.geometry(cfg).uniform if compact is None \
+        else compact
+    if want_compact != stored_compact:
+        idx = topology_lib.stacked_kept_ids(params["hidden"]["mask"], cfg)
+        if want_compact:
+            deltas = engine.compact_deltas(deltas, idx, cfg)
+        else:
+            deltas = engine.densify_deltas(deltas, idx, cfg)
+    return step, params, deltas, tree["state"], extra

@@ -57,7 +57,9 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.core.snn import SNNConfig, init_stream_deltas, init_stream_state
+from repro.core import engine
+from repro.core.snn import (SNNConfig, init_stream_deltas, init_stream_state,
+                            serving_params)
 from repro.launch import sharding
 from repro.launch.batching import SlotGrid
 from repro.obs.trace import NULL_TRACER, Tracer
@@ -91,6 +93,16 @@ class StreamScheduler:
         attached. Note the mode is baked at compile time: a service that
         *becomes* frozen later stops paying the host transfer but keeps
         the (tiny) in-scan accumulators until the scheduler is rebuilt.
+      compact: delta/weight layout of the hot path. ``None`` (default)
+        auto-selects the compact N:M layout whenever the layer geometry is
+        uniform: per-stream deltas are stored ``[S, L, J, T, bk, bo]``
+        (memory scales with density, not ``K·N``) and the chunk step
+        consumes the mask-free ``{"wc", "idx", "readout"}`` weight rep —
+        no dense mask or dense ``[S, L, K, N]`` leaf exists in the serving
+        jaxpr. ``False`` forces the dense baseline layout (the A/B
+        reference). ``self.params`` stays the canonical dense layout
+        either way; the compact exec rep is re-derived on the host at
+        construction and after every topology swap.
       tracer: an ``obs.trace.Tracer`` recording phase-level spans
         (``sched.step/stage/poll_sources/admit/dispatch/retire/
         device_wait``, ``topology.epoch``); the shared no-op
@@ -106,8 +118,12 @@ class StreamScheduler:
                  telemetry: Optional[FleetTelemetry] = None,
                  mesh=None, topology=None, pipeline_depth: int = 0,
                  want_factors: Optional[bool] = None,
+                 compact: Optional[bool] = None,
                  tracer: Optional[Tracer] = None):
         self.params, self.cfg = params, cfg
+        if compact is None:
+            compact = engine.geometry(cfg).uniform
+        self.compact = compact
         self.mesh = mesh
         self.topology = topology          # Optional[TopologyService]
         if topology is not None and topology.cfg != cfg:
@@ -142,7 +158,7 @@ class StreamScheduler:
         self.clock_dt_s = clock_dt_s
         self.grid: SlotGrid[StreamSession] = SlotGrid(n_slots)
         self.state = init_stream_state(cfg, n_slots)
-        self.deltas = init_stream_deltas(cfg, n_slots)
+        self.deltas = init_stream_deltas(cfg, n_slots, compact=compact)
         if mesh is not None:
             self._state_sh = sharding.stream_shardings(self.state, mesh)
             self._delta_sh = sharding.slot_sharding(mesh)
@@ -153,6 +169,20 @@ class StreamScheduler:
         self.telemetry = telemetry or FleetTelemetry()
         self.tracer = tracer or NULL_TRACER
         self.retired: List[StreamSession] = []
+        self._refresh_exec_params()
+
+    def _refresh_exec_params(self) -> None:
+        """(Re)derive what the chunk fn actually consumes from the canonical
+        dense ``self.params`` — the mask-free compact rep in compact mode —
+        and re-measure the resident serving bytes. Host-side; runs at
+        construction and after every topology swap (the only times the base
+        weights change)."""
+        self._exec_params = (serving_params(self.params, self.cfg)
+                             if self.compact else self.params)
+        self._params_bytes = sum(
+            int(leaf.nbytes)
+            for leaf in jax.tree_util.tree_leaves(self._exec_params))
+        self._delta_bytes = int(self.deltas.nbytes)
 
     # -- lifecycle -----------------------------------------------------------
     def submit(self, session: StreamSession) -> None:
@@ -268,7 +298,7 @@ class StreamScheduler:
         with self.tracer.span("sched.dispatch",
                               grid_step=self._staging_step) as sp:
             self.deltas, self.state, metrics = self.chunk_fn(
-                self.params, self.deltas, self.state, staged.events,
+                self._exec_params, self.deltas, self.state, staged.events,
                 staged.valid, staged.adapt_mask)
             self.grid.tick()
             for slot, _ in staged.retiring:
@@ -328,8 +358,9 @@ class StreamScheduler:
                     logits=logits[t, slot].copy()))
         for slot, sess in staged.retiring:
             # the captured post-step handle, NOT self.deltas: a later stage
-            # phase may already have re-admitted into this lane
-            sess.final_deltas = np.asarray(fl.deltas[slot])  # [L, Kmax, N]
+            # phase may already have re-admitted into this lane; layout is
+            # the fleet's: compact [L, J, T, bk, bo] or dense [L, Kmax, N]
+            sess.final_deltas = np.asarray(fl.deltas[slot])
             sess.status, sess.slot = SessionStatus.RETIRED, None
             self.retired.append(sess)
         svc = self.topology
@@ -357,6 +388,9 @@ class StreamScheduler:
         with step walls — pinned in ``tests/test_obs_serving.py``).
         """
         t0 = time.perf_counter()
+        # cached host ints — survives callers swapping self.telemetry
+        self.telemetry.record_bytes_held(self._params_bytes,
+                                         self._delta_bytes)
         with self.tracer.span("sched.step", grid_step=self._staging_step):
             staged = self._stage()
             if self.pipeline.depth == 0:
@@ -409,6 +443,7 @@ class StreamScheduler:
                    merged=len(event.merged_slots))
         self.params = params
         self._replace_lanes(self.state, deltas)
+        self._refresh_exec_params()   # new mask → new compact wc/idx
         self.telemetry.record_topology_epoch(
             grid_step=event.grid_step, pruned=event.pruned,
             regrown=event.regrown, mask_change=event.mask_change,

@@ -57,8 +57,10 @@ class StreamSession:
     # buffered events that arrived but have not been stepped yet
     _pending: List[np.ndarray] = dataclasses.field(default_factory=list)
     # per-stream snapshot of deltas captured at retire (for inspection or
-    # for promoting a stream's adaptation into the shared base); stacked
-    # [n_layers, Kmax, n_hidden]
+    # for promoting a stream's adaptation into the shared base); stacked in
+    # the fleet's delta layout — compact [n_layers, J, T, bk, bo] on the
+    # default hot path, dense [n_layers, Kmax, n_hidden] for dense fleets
+    # (engine.densify_deltas converts when a dense view is needed)
     final_deltas: Optional[np.ndarray] = None
 
     # -- event buffering -----------------------------------------------------
@@ -119,14 +121,16 @@ def read_lane(batched, slot: int):
     return jax.tree_util.tree_map(lambda b: b[slot:slot + 1], batched)
 
 
-def fresh_lane_state(cfg: SNNConfig):
-    """A 1-slot initial ``(StreamState, deltas [1, L, Kmax, N])`` pair used
-    to reset a claimed lane."""
-    return init_stream_state(cfg, 1), init_stream_deltas(cfg, 1)
+def fresh_lane_state(cfg: SNNConfig, compact: bool | None = None):
+    """A 1-slot initial ``(StreamState, deltas)`` pair used to reset a
+    claimed lane (``compact`` selects the delta layout; None = auto)."""
+    return init_stream_state(cfg, 1), init_stream_deltas(cfg, 1,
+                                                         compact=compact)
 
 
 def reset_lane(state, deltas, cfg: SNNConfig, slot: int):
     """Return ``(state, deltas)`` with lane ``slot`` re-initialized in
-    place (fresh traces, zero delta) — the admit-time lane surgery."""
-    s1, d1 = fresh_lane_state(cfg)
+    place (fresh traces, zero delta) — the admit-time lane surgery. The
+    fresh lane matches the layout of the ``deltas`` it is written into."""
+    s1, d1 = fresh_lane_state(cfg, compact=deltas.ndim == 6)
     return write_lane(state, s1, slot), write_lane(deltas, d1, slot)

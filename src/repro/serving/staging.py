@@ -81,7 +81,7 @@ class InFlight:
     at dispatch, so retiring sessions snapshot their final adaptation even
     if a later admit has already reset that lane on the live arrays."""
     staged: StagedChunk
-    deltas: Any                  # [S, L, Kmax, N] device handle (post-step)
+    deltas: Any                  # slot-leading delta handle (post-step); compact [S, L, J, T, bk, bo] or dense [S, L, Kmax, N]
     metrics: Any                 # ChunkMetrics device handles
     grid_step: int               # grid.stats["steps"] after this step's tick
     # host/device overlap bookkeeping (stamped by StagingPipeline push/pop;

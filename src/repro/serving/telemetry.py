@@ -176,6 +176,12 @@ class FleetTelemetry:
             "serving_streams_merged_total", "hot streams folded into base")
         self._topo_mask_change = self.registry.gauge(
             "serving_topology_mask_change", "last epoch's mask-change frac")
+        self._bytes_held = self.registry.gauge(
+            "serving_bytes_held",
+            "resident bytes of serving weight state (params = the exec "
+            "weight rep the chunk fn consumes, deltas = the per-stream "
+            "adaptation tensor) — the memory-accounting A/B signal for the "
+            "compact vs dense layout", labels=("kind",))
         self.topology_epochs: List[dict] = []
 
     @property
@@ -226,6 +232,27 @@ class FleetTelemetry:
         self._wait_s.inc(wait_s)
         self._overlap_hist.observe(ratio)
         return ratio
+
+    def record_bytes_held(self, params_bytes: int, delta_bytes: int) -> None:
+        """Log the resident serving weight-state bytes (scheduler-measured
+        ``.nbytes`` of the exec weight rep and the delta tensor). Gauges,
+        not counters: re-recorded every grid step, they track the *current*
+        layout — a topology swap or layout change moves them."""
+        self._bytes_held.labels(kind="params").set(float(params_bytes))
+        self._bytes_held.labels(kind="deltas").set(float(delta_bytes))
+        self._bytes_held.labels(kind="total").set(
+            float(params_bytes + delta_bytes))
+
+    def bytes_held(self) -> dict:
+        """Last-recorded resident bytes {params, deltas, total} (0 before
+        the first grid step)."""
+        fam = self.registry.get("serving_bytes_held")
+        out = {"params": 0.0, "deltas": 0.0, "total": 0.0}
+        if fam is not None:
+            for values, child in fam.samples():
+                kind = dict(zip(fam.labelnames, values)).get("kind", "total")
+                out[kind] = float(child.value)
+        return out
 
     def record_topology_epoch(self, *, grid_step: int, pruned: int,
                               regrown: int, mask_change: float,
@@ -297,6 +324,7 @@ class FleetTelemetry:
             "events_per_s": events_in / wall if wall > 0 else 0.0,
             "timesteps_per_s": timesteps / wall if wall > 0 else 0.0,
             "overlap_ratio": self.overlap_ratio(),
+            "bytes_held": self.bytes_held(),
             **self.latency_percentiles(),
             **self.topology_rollup(),
         }

@@ -64,25 +64,26 @@ def test_lif_step_parity():
 
 def test_wu_outer_parity(params):
     """The training WU on masked N:M weights: dense dw·mask (ref) equals the
-    compact-layout outer product (wu_outer kernel), densified."""
+    compact-layout outer product (wu_outer kernel), densified. The sparsity
+    pattern rides inside the weight rep itself (mask_f for ref, kept block
+    ids for compact) — train_wu takes no separate mask argument."""
     wr, wp = _wreps(params)
-    masks_f = engine.dense_masks(params["hidden"]["mask"], CFG)
     ks = jax.random.split(jax.random.PRNGKey(3), 2)
     pre_tr = jax.random.uniform(ks[0], (5, CFG.n_in))
     mod = jax.random.normal(ks[1], (5, CFG.n_hidden))
     scale = jnp.float32(0.03)
     for l in range(CFG.n_layers):
-        want = engine.train_wu(REF, CFG, _slice(wr, l), pre_tr, mod, scale,
-                               masks_f[l])["w"]
-        got_rep = engine.train_wu(PAL, CFG, _slice(wp, l), pre_tr, mod, scale,
-                                  masks_f[l])
+        want = engine.train_wu(REF, CFG, _slice(wr, l), pre_tr, mod,
+                               scale)["w"]
+        got_rep = engine.train_wu(PAL, CFG, _slice(wp, l), pre_tr, mod,
+                                  scale)
         got = engine.finalize_weights(
             jax.tree_util.tree_map(lambda a: a[None], got_rep), CFG, PAL)[0]
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    atol=1e-5)
         # gate closed (scale 0) -> exactly no update on either path
         same = engine.train_wu(REF, CFG, _slice(wr, l), pre_tr, mod,
-                               jnp.float32(0.0), masks_f[l])["w"]
+                               jnp.float32(0.0))["w"]
         np.testing.assert_array_equal(np.asarray(same),
                                       np.asarray(params["hidden"]["w"][l]))
 

@@ -16,7 +16,7 @@ import numpy as np
 import pytest
 from _compat import given, settings, strategies as st
 
-from repro.core import dsst, sparsity as sp, topology
+from repro.core import dsst, engine, sparsity as sp, topology
 from repro.core.snn import (SNNConfig, init_params, init_state,
                             init_stream_deltas, run_sample)
 
@@ -225,7 +225,15 @@ def test_run_sample_honors_schedule():
 
 def test_init_stream_deltas_match_topology_width():
     """The delta tensor the projection operates on matches the dense mask
-    expansion — shape contract between serving and topology."""
-    dl = init_stream_deltas(CFG, 4)
-    dm = topology.dense_masks(_params()["hidden"]["mask"], CFG)
-    assert dl.shape[1:] == dm.shape
+    expansion — shape contract between serving and topology. The dense
+    baseline matches the mask directly; the compact default densifies to
+    the same dense width through the mask's kept-block ids."""
+    mask = _params()["hidden"]["mask"]
+    dm = topology.dense_masks(mask, CFG)
+    dl_dense = init_stream_deltas(CFG, 4, compact=False)
+    assert dl_dense.shape[1:] == dm.shape
+    dl = init_stream_deltas(CFG, 4)               # compact [S,L,J,T,bk,bo]
+    assert dl.ndim == 6
+    idx = topology.stacked_kept_ids(mask, CFG)
+    back = engine.densify_deltas(dl, idx, CFG)
+    assert back.shape[1:] == dm.shape

@@ -157,11 +157,17 @@ def test_deltas_bit_exact_across_swap(params):
     old_mask = params["hidden"]["mask"]
     p2, dl2, event = svc.evolve(params, dl, grid_step=1)
     assert event.pruned > 0
+    # deltas are compact [S, L, J, T, bk, bo]; densify each side over its
+    # own mask's kept-block ids for the dense survivor comparison
+    from repro.core import engine
+    dl_dense = np.asarray(engine.densify_deltas(
+        dl, topology.stacked_kept_ids(old_mask, CFG), CFG))
+    dl2_dense = np.asarray(engine.densify_deltas(
+        dl2, topology.stacked_kept_ids(p2["hidden"]["mask"], CFG), CFG))
     surv = np.asarray(topology.survivors_dense(
         old_mask, p2["hidden"]["mask"], CFG))
-    np.testing.assert_array_equal(np.asarray(dl2)[:, surv],
-                                  np.asarray(dl)[:, surv])
-    assert np.all(np.asarray(dl2)[:, ~surv] == 0.0)
+    np.testing.assert_array_equal(dl2_dense[:, surv], dl_dense[:, surv])
+    assert np.all(dl2_dense[:, ~surv] == 0.0)
 
 
 def test_frozen_config_never_evolves(params):
@@ -221,8 +227,13 @@ def test_fold_hot_stream_exact_and_generic(params):
     svc.observe(jax.device_get(m))
     assert float(jnp.abs(dl[0]).max()) > 0
 
-    masks_f = np.asarray(topology.dense_masks(p["hidden"]["mask"], cfg))
-    want_w = np.asarray(p["hidden"]["w"]) + np.asarray(dl[0]) * masks_f
+    # deltas are compact [S, L, J, T, bk, bo] — they live only on kept
+    # blocks by construction, so densifying over the base mask's kept ids
+    # IS the masked dense delta
+    from repro.core import engine
+    dl_dense = np.asarray(engine.densify_deltas(
+        dl, topology.stacked_kept_ids(p["hidden"]["mask"], cfg), cfg))
+    want_w = np.asarray(p["hidden"]["w"]) + dl_dense[0]
     p2, dl2, event = svc.evolve(p, dl, merge_slots=(0,), grid_step=1)
     assert event.merged_slots == (0,) and event.pruned == 0
     np.testing.assert_array_equal(np.asarray(p2["hidden"]["mask"]),

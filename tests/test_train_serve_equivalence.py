@@ -75,8 +75,13 @@ def test_chunk_trajectory_matches_sample(depth):
         np.testing.assert_allclose(a, b, atol=1e-5)
 
     # weight drift: in-place base updates == accumulated per-stream delta
+    # (serving deltas come back compact [S, L, J, T, bk, bo]; densify over
+    # the frozen base's kept-block ids for the dense comparison)
+    from repro.core import topology
+    idx = topology.stacked_kept_ids(params["hidden"]["mask"], cfg)
+    dl_dense = engine.densify_deltas(dl, idx, cfg)
     drift = np.asarray(ps["hidden"]["w"] - params["hidden"]["w"])
-    np.testing.assert_allclose(drift, np.asarray(dl[0]), atol=1e-5)
+    np.testing.assert_allclose(drift, np.asarray(dl_dense[0]), atol=1e-5)
     # labels never entered: readout identical on both paths
     np.testing.assert_array_equal(np.asarray(ps["readout"]),
                                   np.asarray(params["readout"]))
