@@ -34,21 +34,26 @@ ARTIFACT_SCHEMA = "repro-bench/1"
 
 
 def write_artifact(path: str, rows: list, *, failed: int = 0,
-                   argv=None) -> dict:
+                   argv=None, contracts_checked=None) -> dict:
     """Write the ``--json`` results artifact; returns the document.
 
     Schema ``repro-bench/1``: top-level ``schema``/``created_unix_s``/
-    ``argv``/``failed`` plus ``rows`` — each row carries the CSV triple
-    (``name``, ``us_per_call``, ``derived``) verbatim and, when a module
-    attached them, structured extras: ``metrics`` (a flat dict of derived
-    numbers, e.g. the serving rows' overlap ratio and per-phase p50/p99)
-    and ``obs`` (a ``MetricsRegistry.snapshot()`` of the run).
+    ``argv``/``failed``/``contracts_checked`` plus ``rows`` — each row
+    carries the CSV triple (``name``, ``us_per_call``, ``derived``)
+    verbatim and, when a module attached them, structured extras:
+    ``metrics`` (a flat dict of derived numbers, e.g. the serving rows'
+    overlap ratio and per-phase p50/p99) and ``obs`` (a
+    ``MetricsRegistry.snapshot()`` of the run). ``contracts_checked`` is
+    ``repro.analysis.registry.summary()`` — which entrypoint contract
+    sets held when the numbers were taken (``None`` if the registry
+    could not run).
     """
     doc = {
         "schema": ARTIFACT_SCHEMA,
         "created_unix_s": time.time(),
         "argv": list(sys.argv if argv is None else argv),
         "failed": int(failed),
+        "contracts_checked": contracts_checked,
         "rows": [{
             "name": r["name"],
             "us_per_call": float(r["us_per_call"]),
@@ -117,9 +122,19 @@ def main() -> None:
             collected.append({"name": key, "us_per_call": 0.0,
                               "derived": "ERROR"})
     if args.json:
+        # stamp the artifact with the contract-registry result: benchmark
+        # numbers only mean something if the hot path's structural
+        # invariants held when they were taken
+        try:
+            from repro.analysis import registry as _registry
+            contracts = _registry.summary()
+        except Exception:
+            traceback.print_exc(file=sys.stderr)
+            contracts = None
         # written even on partial failure (failed > 0 is recorded in the
         # artifact) so a flaky module never costs the whole trajectory point
-        write_artifact(args.json, collected, failed=failed)
+        write_artifact(args.json, collected, failed=failed,
+                       contracts_checked=contracts)
     if failed:
         sys.exit(1)
 

@@ -1,0 +1,49 @@
+"""Static analysis subsystem: jaxpr contract checking + host-path lint.
+
+Two analyzers (see docs/ANALYSIS.md):
+
+* ``repro.analysis.jaxpr_contracts`` — ``check(fn, args, contracts)``
+  walks a callable's ClosedJaxpr (recursing into scan/while/cond/pjit/
+  shard_map) and verifies named structural contracts: ``no_collectives``,
+  ``slot_separable``, ``mask_free``, ``no_dense_deltas``,
+  ``no_factor_carries``, ``dtype_discipline``, ``compile_count``.
+* ``repro.analysis.lint`` — AST rules over the host path
+  (``python -m repro.analysis.lint``): hidden device syncs in hot phases,
+  unbounded obs/telemetry containers, un-locked shared-state mutation,
+  jax imports in host-only modules, untagged docs fences.
+
+``repro.analysis.registry`` binds contract sets to the real entrypoints
+(the serving chunk fn in every layout, the raw engine chunk step, the
+batcher decode step); import it explicitly — it pulls in the serving
+stack, which this package root deliberately does not.
+"""
+from repro.analysis.jaxpr_contracts import (COLLECTIVE_PRIMITIVES, Contract,
+                                            ContractViolationError, Report,
+                                            Violation, all_avals,
+                                            assert_chunk_carry_slot_separable,
+                                            check, compile_count,
+                                            dtype_discipline, iter_eqns,
+                                            iter_jaxprs, mask_free,
+                                            no_collectives, no_dense_deltas,
+                                            no_dense_leaves,
+                                            no_factor_carries, slot_separable)
+_LINT_EXPORTS = ("RULES", "LintViolation", "lint_paths", "lint_source")
+
+
+def __getattr__(name):
+    # lint symbols resolve lazily so `python -m repro.analysis.lint` does not
+    # import the module twice (once via this package root, once as __main__)
+    if name in _LINT_EXPORTS:
+        from repro.analysis import lint as _lint
+        return getattr(_lint, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "COLLECTIVE_PRIMITIVES", "Contract", "ContractViolationError", "Report",
+    "Violation", "all_avals", "assert_chunk_carry_slot_separable", "check",
+    "compile_count", "dtype_discipline", "iter_eqns", "iter_jaxprs",
+    "mask_free", "no_collectives", "no_dense_deltas", "no_dense_leaves",
+    "no_factor_carries", "slot_separable",
+    "RULES", "LintViolation", "lint_paths", "lint_source",
+]

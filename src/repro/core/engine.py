@@ -662,16 +662,11 @@ def _assert_slot_separable(carry, outs, C: int, S: int, cfg,
     """The chunk step's zero-collective contract: every per-stream quantity
     keeps its slot axis through the scan. A reduction over slots — which
     would silently break the slot-axis ``shard_map`` in serving/adapt.py —
-    shows up at trace time as a dropped ``S`` dimension here."""
-    layers, x_tr, ss_mean, t_w, samp, dls, *acc = carry
-    for leaf in jax.tree_util.tree_leaves(layers):
-        assert leaf.shape[:2] == (cfg.n_layers, S), leaf.shape
-    assert x_tr.shape[0] == S, x_tr.shape
-    assert ss_mean.shape == (cfg.n_layers, S), ss_mean.shape
-    assert t_w.shape == (S,) and samp.shape == (S,), (t_w.shape, samp.shape)
-    assert dls.shape[:2] == (cfg.n_layers, S), dls.shape
-    assert len(acc) == (2 if want_factors else 0), len(acc)
-    for a in acc:
-        assert a.shape[:2] == (cfg.n_layers, S), a.shape
-    for name, leaf in outs.items():
-        assert leaf.shape[:2] == (C, S), (name, leaf.shape)
+    shows up at trace time as a dropped ``S`` dimension here. Thin wrapper
+    over the shared analyzer (repro.analysis.jaxpr_contracts), imported
+    lazily so the engine keeps no static analysis dependency."""
+    from repro.analysis.jaxpr_contracts import \
+        assert_chunk_carry_slot_separable
+    assert_chunk_carry_slot_separable(carry, outs, C=C, S=S,
+                                      n_layers=cfg.n_layers,
+                                      want_factors=want_factors)

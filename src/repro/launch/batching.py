@@ -184,6 +184,8 @@ class ContinuousBatcher:
             toks = self._feed_tokens()
             logits, self.cache = self._step(self.params, self.cache,
                                             jnp.asarray(toks))
+            # the next-token fetch is the decode loop's retire point;
+            # lint: ok SYNC01 — autoregressive feedback is synchronous
             nxt = np.asarray(jnp.argmax(logits, -1))
         self.grid.tick()
         for i, req in enumerate(self.grid.occupant):

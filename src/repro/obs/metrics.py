@@ -188,6 +188,8 @@ class Family:
         with self._lock:
             child = self._children.get(key)
             if child is None:
+                # one child per label set (standard Prometheus semantics);
+                # lint: ok OBS01 — label cardinality is caller-bounded
                 child = self._children[key] = self._make_child()
         return child
 
@@ -254,6 +256,8 @@ class MetricsRegistry:
         with self._lock:
             fam = self._families.get(name)
             if fam is None:
+                # families are code-defined (one per metric name in source);
+                # lint: ok OBS01 — the registry cannot grow unbounded
                 fam = self._families[name] = Family(
                     name, help, kind, labels, make_child)
                 if not labels:

@@ -29,9 +29,9 @@ This is the occupancy signal adaptive ``pipeline_depth`` control needs.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
-
-import numpy as np
+import threading
+from collections import deque
+from typing import Deque, Dict, List, Optional
 
 from repro.core.energy import OperatingPoint, report
 from repro.obs.metrics import (LATENCY_BUCKETS_S, RATIO_BUCKETS,
@@ -139,10 +139,12 @@ class FleetTelemetry:
     """
 
     def __init__(self, op: Optional[OperatingPoint] = None,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 max_epoch_events: int = 256):
         self.op = op or OperatingPoint.low_power()
         self.registry = registry or MetricsRegistry()
         self.streams: Dict[int, StreamCounters] = {}
+        self._lock = threading.Lock()
         self._steps = self.registry.counter(
             "serving_grid_steps_total", "scheduler grid steps dispatched")
         self._step_hist = self.registry.histogram(
@@ -176,13 +178,20 @@ class FleetTelemetry:
             "serving_streams_merged_total", "hot streams folded into base")
         self._topo_mask_change = self.registry.gauge(
             "serving_topology_mask_change", "last epoch's mask-change frac")
+        self._topo_mask_change_sum = self.registry.counter(
+            "serving_topology_mask_change_sum",
+            "summed per-epoch mask-change fractions (mean = sum / epochs)")
         self._bytes_held = self.registry.gauge(
             "serving_bytes_held",
             "resident bytes of serving weight state (params = the exec "
             "weight rep the chunk fn consumes, deltas = the per-stream "
             "adaptation tensor) — the memory-accounting A/B signal for the "
             "compact vs dense layout", labels=("kind",))
-        self.topology_epochs: List[dict] = []
+        # recent-events ring: the per-epoch *log* is bounded (a long-lived
+        # fleet otherwise grows it forever — the lint's OBS01 class), while
+        # the exact aggregates live in the registry counters above and
+        # topology_rollup() reads those, so truncation loses no totals.
+        self.topology_epochs: Deque[dict] = deque(maxlen=max_epoch_events)
 
     @property
     def steps(self) -> int:
@@ -190,10 +199,13 @@ class FleetTelemetry:
         return int(self._steps.value)
 
     def stream(self, sid: int) -> StreamCounters:
-        """The (created-on-first-use) per-stream counter record for ``sid``."""
-        if sid not in self.streams:
-            self.streams[sid] = StreamCounters(sid, self.registry)
-        return self.streams[sid]
+        """The (created-on-first-use) per-stream counter record for ``sid``.
+        Creation is locked so concurrent sources racing on a new sid get
+        the same record (never two counter children for one stream)."""
+        with self._lock:
+            if sid not in self.streams:
+                self.streams[sid] = StreamCounters(sid, self.registry)
+            return self.streams[sid]
 
     def record_step(self, latency_s: float) -> None:
         """Log one grid step's host wall time (one ``step()`` call — under
@@ -263,10 +275,12 @@ class FleetTelemetry:
         self._topo_regrown.inc(int(regrown))
         self._topo_merged.inc(int(merged_streams))
         self._topo_mask_change.set(float(mask_change))
-        self.topology_epochs.append({
-            "grid_step": int(grid_step), "pruned": int(pruned),
-            "regrown": int(regrown), "mask_change": float(mask_change),
-            "merged_streams": int(merged_streams)})
+        self._topo_mask_change_sum.inc(float(mask_change))
+        with self._lock:
+            self.topology_epochs.append({
+                "grid_step": int(grid_step), "pruned": int(pruned),
+                "regrown": int(regrown), "mask_change": float(mask_change),
+                "merged_streams": int(merged_streams)})
 
     # -- rollup --------------------------------------------------------------
     def latency_percentiles(self) -> dict:
@@ -331,16 +345,19 @@ class FleetTelemetry:
         return out
 
     def topology_rollup(self) -> dict:
-        """Aggregate of the topology-epoch event log (counts, mask-change
-        mean, streams merged); all zeros for a frozen fleet."""
-        ep = self.topology_epochs
+        """Aggregate topology-epoch stats (counts, mask-change mean, streams
+        merged); all zeros for a frozen fleet. Read from the registry
+        counters, not the event log — ``topology_epochs`` is a bounded
+        recent-events ring, so these totals stay exact past its horizon."""
+        epochs = int(self._topo_epochs.value)
         return {
-            "topology_epochs": len(ep),
-            "topology_pruned": sum(e["pruned"] for e in ep),
-            "topology_regrown": sum(e["regrown"] for e in ep),
+            "topology_epochs": epochs,
+            "topology_pruned": int(self._topo_pruned.value),
+            "topology_regrown": int(self._topo_regrown.value),
             "topology_mask_change_mean":
-                float(np.mean([e["mask_change"] for e in ep])) if ep else 0.0,
-            "streams_merged": sum(e["merged_streams"] for e in ep),
+                (float(self._topo_mask_change_sum.value) / epochs
+                 if epochs else 0.0),
+            "streams_merged": int(self._topo_merged.value),
         }
 
     def per_stream(self) -> List[dict]:

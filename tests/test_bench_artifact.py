@@ -26,12 +26,16 @@ def test_write_artifact_schema_and_extras(tmp_path):
          "obs": {"serving_grid_steps_total": {"type": "counter",
                                               "samples": []}}},
     ]
-    doc = write_artifact(path, rows, failed=1, argv=["bench", "--json", path])
+    doc = write_artifact(path, rows, failed=1, argv=["bench", "--json", path],
+                         contracts_checked={"entrypoints": ["e"],
+                                            "contracts": 3, "violations": 0,
+                                            "ok": True})
     on_disk = json.load(open(path))
     assert on_disk == json.loads(json.dumps(doc))   # what's returned is written
     assert on_disk["schema"] == ARTIFACT_SCHEMA == "repro-bench/1"
     assert on_disk["failed"] == 1
     assert on_disk["argv"] == ["bench", "--json", path]
+    assert on_disk["contracts_checked"]["ok"] is True
     assert on_disk["created_unix_s"] > 0
     r0, r1 = on_disk["rows"]
     assert r0 == {"name": "a/b", "us_per_call": 12.5, "derived": "x=1"}
@@ -58,6 +62,11 @@ def test_cli_json_artifact_end_to_end(tmp_path):
     assert doc["schema"] == ARTIFACT_SCHEMA
     assert doc["failed"] == 0
     assert doc["rows"], "table1 produced no rows"
+    # the contract-registry stamp: every real entrypoint's contract set
+    # held when these numbers were taken
+    cc = doc["contracts_checked"]
+    assert cc["ok"] is True and cc["violations"] == 0
+    assert cc["contracts"] > 0 and cc["entrypoints"]
     csv_lines = [l for l in out.stdout.strip().splitlines()
                  if l and not l.startswith("name,")]
     assert len(doc["rows"]) == len(csv_lines)

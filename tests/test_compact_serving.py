@@ -175,7 +175,13 @@ def test_serving_jaxpr_has_no_dense_mask_or_dense_deltas():
     """THE tentpole assert: with mask-free exec params and compact deltas
     the chunk jaxpr contains no f32 leaf shaped like the dense mask
     [L, Kmax, N] or the dense delta tensor [S, L, Kmax, N] — neither as a
-    constant nor as an intermediate."""
+    constant nor as an intermediate. Since the static-analysis PR the
+    hand-rolled jaxpr walk lives in repro.analysis (mask_free /
+    no_dense_deltas check avals recursively AND cross-check the printed
+    jaxpr — belt and braces for consts a traversal might miss); this test
+    pins those contracts to the real chunk entrypoint."""
+    from repro import analysis
+
     cfg = CFG
     S, C = 4, 6
     params = _params(0, cfg)
@@ -185,46 +191,13 @@ def test_serving_jaxpr_has_no_dense_mask_or_dense_deltas():
     ev = _events(0, C, S, cfg)
     valid = jnp.ones((C, S), bool)
 
-    jaxpr = jax.make_jaxpr(
-        lambda p, d, s: run_chunk(p, d, s, ev, valid, cfg))(sp_exec, dc, st0)
-
-    mask_shape = (cfg.n_layers, cfg.n_in, cfg.n_hidden)
-    delta_shape = (S,) + mask_shape
-
-    def _inner_jaxprs(params):
-        for v in params.values():
-            for cand in (v if isinstance(v, (tuple, list)) else (v,)):
-                if hasattr(cand, "jaxpr"):         # ClosedJaxpr
-                    yield cand.jaxpr
-                elif hasattr(cand, "eqns"):        # Jaxpr
-                    yield cand
-
-    def all_avals(jx):
-        stack = [jx.jaxpr]
-        seen = set()
-        while stack:
-            j = stack.pop()
-            if id(j) in seen:
-                continue
-            seen.add(id(j))
-            for v in list(j.constvars) + list(j.invars):
-                yield v.aval
-            for eqn in j.eqns:
-                for v in list(eqn.invars) + list(eqn.outvars):
-                    aval = getattr(v, "aval", None)
-                    if aval is not None:
-                        yield aval
-                stack.extend(_inner_jaxprs(eqn.params))
-
-    offenders = [a for a in all_avals(jaxpr)
-                 if getattr(a, "shape", None) in (mask_shape, delta_shape)
-                 and str(getattr(a, "dtype", "")) == "float32"]
-    assert not offenders, offenders
-    # the string form agrees (belt and braces — catches consts in sub-jaxprs
-    # any traversal might miss)
-    s = str(jaxpr)
-    assert f"f32[{','.join(map(str, mask_shape))}]" not in s
-    assert f"f32[{','.join(map(str, delta_shape))}]" not in s
+    report = analysis.check(
+        lambda p, d, s: run_chunk(p, d, s, ev, valid, cfg),
+        (sp_exec, dc, st0),
+        [analysis.mask_free(cfg), analysis.no_dense_deltas(cfg, S)])
+    report.raise_if_violations()
+    assert report.ok and set(report.contracts) == {"mask_free",
+                                                  "no_dense_deltas"}
 
 
 def test_dense_baseline_still_runs_and_matches():

@@ -39,7 +39,8 @@ def test_doc_files_exist_and_carry_executable_snippets():
     """The docs subsystem's floor: the guides exist and each contributes
     at least one *executed* (non-noexec) python block — if every snippet
     were opted out, this extractor would be checking nothing."""
-    for name in ("ARCHITECTURE.md", "SERVING.md", "OBSERVABILITY.md"):
+    for name in ("ARCHITECTURE.md", "SERVING.md", "OBSERVABILITY.md",
+                 "ANALYSIS.md"):
         path = ROOT / "docs" / name
         assert path.exists(), f"docs/{name} missing"
         blocks = extract_blocks(path)

@@ -1,0 +1,319 @@
+"""Per-rule fixtures for the host-path lint (repro.analysis.lint).
+
+Each rule gets a positive snippet (must be caught) and a negative twin
+(must stay clean), plus the suppression-comment and baseline workflows and
+an end-to-end CLI run over the real repo against the checked-in baseline.
+"""
+import json
+import pathlib
+import textwrap
+
+from repro.analysis import lint
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# paths chosen to fall inside each rule's scope
+SYNC_PATH = "src/repro/serving/staging.py"
+OBS_PATH = "src/repro/obs/fixture.py"
+DOC_PATH = "docs/FIXTURE.md"
+
+
+def _lint(path, src):
+    return lint.lint_source(path, textwrap.dedent(src))
+
+
+def _rules(violations):
+    return sorted({v.rule for v in violations})
+
+
+# ----------------------------------------------------------------- SYNC01
+
+def test_sync01_catches_item_in_hot_phase():
+    vs = _lint(SYNC_PATH, """\
+        class Pipe:
+            def poll(self):
+                n = self.counts.item()
+                return n
+        """)
+    assert _rules(vs) == ["SYNC01"]
+    assert "poll" in vs[0].message and vs[0].line == 3
+
+
+def test_sync01_catches_np_asarray_on_device_state():
+    vs = _lint(SYNC_PATH, """\
+        import numpy as np
+
+        class Pipe:
+            def _stage(self, chunk):
+                host = np.asarray(chunk.metrics)
+                return host
+        """)
+    assert _rules(vs) == ["SYNC01"]
+    assert "np.asarray" in vs[0].message
+
+
+def test_sync01_negative_cold_function_and_host_values():
+    vs = _lint(SYNC_PATH, """\
+        import numpy as np
+
+        class Pipe:
+            def retire(self):
+                return self.counts.item()       # retire may wait
+
+            def poll(self):
+                return np.asarray([1, 2, 3])    # host literal, no sync
+        """)
+    assert vs == []
+
+
+def test_sync01_out_of_scope_path_is_clean():
+    vs = _lint("src/repro/core/engine.py", """\
+        class X:
+            def poll(self):
+                return self.counts.item()
+        """)
+    assert vs == []
+
+
+# ------------------------------------------------------------------ OBS01
+
+def test_obs01_catches_unbounded_append():
+    vs = _lint(OBS_PATH, """\
+        class Telemetry:
+            def __init__(self):
+                self.events = []
+
+            def record(self, e):
+                self.events.append(e)
+        """)
+    assert _rules(vs) == ["OBS01"]
+    assert "self.events" in vs[0].message and "record" in vs[0].message
+
+
+def test_obs01_catches_dict_key_insert_and_bare_deque():
+    vs = _lint(OBS_PATH, """\
+        from collections import deque
+
+        class Telemetry:
+            def __init__(self):
+                self.by_sid = {}
+                self.log = deque()
+
+            def record(self, sid, e):
+                self.by_sid[sid] = e
+                self.log.append(e)
+        """)
+    assert [v.rule for v in vs] == ["OBS01", "OBS01"]
+
+
+def test_obs01_negative_bounded_deque_is_clean():
+    vs = _lint(OBS_PATH, """\
+        from collections import deque
+
+        class Telemetry:
+            def __init__(self):
+                self.recent = deque(maxlen=256)
+
+            def record(self, e):
+                self.recent.append(e)
+        """)
+    assert vs == []
+
+
+# ------------------------------------------------------------------ OBS02
+
+def test_obs02_catches_mutation_outside_lock():
+    vs = _lint(OBS_PATH, """\
+        import threading
+
+        class Shared:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.total = 0
+
+            def bump(self, n):
+                self.total += n
+        """)
+    assert _rules(vs) == ["OBS02"]
+    assert "self.total" in vs[0].message and "bump" in vs[0].message
+
+
+def test_obs02_negative_mutation_under_lock():
+    vs = _lint(OBS_PATH, """\
+        import threading
+
+        class Shared:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.total = 0
+
+            def bump(self, n):
+                with self._lock:
+                    if n > 0:
+                        self.total += n
+        """)
+    assert vs == []
+
+
+def test_obs02_negative_lockless_class_out_of_scope():
+    # a class with no lock attribute has opted out of OBS02 (OBS01 still
+    # watches its containers)
+    vs = _lint(OBS_PATH, """\
+        class Plain:
+            def __init__(self):
+                self.total = 0
+
+            def bump(self, n):
+                self.total += n
+        """)
+    assert vs == []
+
+
+# ----------------------------------------------------------------- HOST01
+
+def test_host01_catches_module_level_jax_import():
+    vs = _lint(OBS_PATH, """\
+        import jax
+        import jax.numpy as jnp
+        """)
+    assert [v.rule for v in vs] == ["HOST01", "HOST01"]
+
+
+def test_host01_negative_lazy_import_is_fine():
+    vs = _lint(OBS_PATH, """\
+        def fetch(x):
+            import jax
+            return jax.device_get(x)
+        """)
+    assert vs == []
+
+
+# ------------------------------------------------------------------ DOC01
+
+def test_doc01_catches_bare_pythonish_fence():
+    vs = _lint(DOC_PATH, "intro\n\n```\nimport repro\nprint(repro)\n```\n")
+    assert _rules(vs) == ["DOC01"]
+
+
+def test_doc01_negative_tagged_or_non_python():
+    clean = ("```python\nimport repro\n```\n"
+             "```python noexec\nfrom x import y\n```\n"
+             "```\n$ pip list\n```\n")
+    assert _lint(DOC_PATH, clean) == []
+
+
+# ------------------------------------------------------- suppression lines
+
+def test_suppression_same_line_and_line_above():
+    vs = _lint(SYNC_PATH, """\
+        class Pipe:
+            def poll(self):
+                a = self.counts.item()  # lint: ok SYNC01 sanctioned here
+                # lint: ok SYNC01 sanctioned here too
+                b = self.totals.item()
+                c = self.others.item()
+                return a + b + c
+        """)
+    assert len(vs) == 1 and vs[0].line == 6
+
+
+def test_suppression_rule_must_match():
+    vs = _lint(SYNC_PATH, """\
+        class Pipe:
+            def poll(self):
+                return self.counts.item()  # lint: ok OBS01 wrong rule
+        """)
+    assert _rules(vs) == ["SYNC01"]
+
+
+def test_suppression_markdown_comment():
+    src = ("<!-- lint: ok DOC01 illustration of a bare fence -->\n"
+           "```\nimport repro\n```\n")
+    assert _lint(DOC_PATH, src) == []
+
+
+# ------------------------------------------------------- baseline workflow
+
+def test_baseline_roundtrip_new_and_stale(tmp_path):
+    caught = _lint(OBS_PATH, """\
+        class Telemetry:
+            def __init__(self):
+                self.events = []
+
+            def record(self, e):
+                self.events.append(e)
+        """)
+    assert len(caught) == 1
+
+    bp = tmp_path / "baseline.json"
+    lint.write_baseline(bp, caught)
+    entries = lint.load_baseline(bp)
+    assert [e["rule"] for e in entries] == ["OBS01"]
+
+    # accepted finding filters out; nothing stale
+    new, stale = lint.apply_baseline(caught, entries)
+    assert new == [] and stale == []
+
+    # a different violation is NOT covered; the old entry reads as stale
+    other = _lint(OBS_PATH, """\
+        class Telemetry:
+            def __init__(self):
+                self.log = []
+
+            def push(self, e):
+                self.log.append(e)
+        """)
+    new, stale = lint.apply_baseline(other, entries)
+    assert len(new) == 1 and len(stale) == 1
+
+
+def test_baseline_keyed_by_line_text_not_number():
+    src = """\
+        class Telemetry:
+            def __init__(self):
+                self.events = []
+
+            def record(self, e):
+                self.events.append(e)
+        """
+    v0 = _lint(OBS_PATH, src)[0]
+    shifted = _lint(OBS_PATH, "# a new leading comment\n"
+                    + textwrap.dedent(src))[0]
+    assert shifted.line != v0.line
+    assert shifted.baseline_key == v0.baseline_key
+
+
+# ------------------------------------------------------------ CLI / repo
+
+def test_cli_runs_clean_against_checked_in_baseline(tmp_path, capsys):
+    """Acceptance: the real repo lints clean through lint-baseline.json
+    (what CI's static-analysis step runs)."""
+    out_json = tmp_path / "lint.json"
+    rc = lint.main(["--root", str(REPO_ROOT), "--baseline",
+                    "--json", str(out_json)])
+    stdout = capsys.readouterr().out
+    assert rc == 0, stdout
+    assert "lint clean" in stdout
+    doc = json.loads(out_json.read_text())
+    assert doc["schema"] == "repro-lint/1"
+    assert doc["violations"] == [] and doc["stale_baseline"] == []
+
+
+def test_cli_without_baseline_reports_accepted_findings(capsys):
+    """The baseline is load-bearing: the raw run still sees the accepted
+    per-stream-counter finding (so the baseline file cannot rot silently)."""
+    rc = lint.main(["--root", str(REPO_ROOT)])
+    stdout = capsys.readouterr().out
+    assert rc == 1
+    assert "serving/telemetry.py" in stdout and "OBS01" in stdout
+
+
+def test_repo_baseline_file_matches_real_findings():
+    """Every checked-in baseline entry corresponds to a live finding (no
+    stale entries) and carries a reason."""
+    entries = lint.load_baseline(REPO_ROOT / lint.DEFAULT_BASELINE)
+    assert entries, "baseline should carry the accepted findings"
+    assert all(e.get("reason") for e in entries)
+    violations = lint.lint_paths(REPO_ROOT)
+    new, stale = lint.apply_baseline(violations, entries)
+    assert new == [] and stale == []

@@ -313,6 +313,59 @@ def test_fleet_telemetry_memory_is_bounded():
         assert abs(lp[key] - exact) / exact < 0.12, (key, lp[key], exact)
 
 
+def test_topology_epoch_log_bounded_rollup_exact():
+    """Regression for the lint-surfaced OBS01 finding: the per-epoch event
+    *log* is a bounded recent-events ring, while the rollup reads the
+    registry counters — so its totals stay exact past the ring's horizon."""
+    tel = FleetTelemetry(max_epoch_events=32)
+    n = 500
+    for i in range(n):
+        tel.record_topology_epoch(grid_step=i, pruned=2, regrown=1,
+                                  mask_change=0.01 * (i % 7),
+                                  merged_streams=i % 2)
+    assert len(tel.topology_epochs) == 32                       # bounded
+    assert tel.topology_epochs[-1]["grid_step"] == n - 1        # most recent
+    r = tel.topology_rollup()
+    assert r["topology_epochs"] == n                            # exact
+    assert r["topology_pruned"] == 2 * n
+    assert r["topology_regrown"] == n
+    assert r["streams_merged"] == sum(i % 2 for i in range(n))
+    exact_mean = sum(0.01 * (i % 7) for i in range(n)) / n
+    assert r["topology_mask_change_mean"] == pytest.approx(exact_mean)
+
+
+def test_fleet_telemetry_thread_safe_mutation():
+    """Regression for the lint-surfaced OBS02 finding: concurrent sources
+    racing on stream() creation and epoch recording lose nothing — one
+    counter record per sid, exact epoch totals."""
+    import threading
+
+    tel = FleetTelemetry()
+    n_threads, per_thread, sids = 8, 50, range(6)
+    seen = [[] for _ in range(n_threads)]
+    start = threading.Barrier(n_threads)
+
+    def worker(t):
+        start.wait()
+        for i in range(per_thread):
+            seen[t].append(tel.stream(sids[i % len(sids)]))
+            tel.record_topology_epoch(grid_step=i, pruned=1, regrown=1,
+                                      mask_change=0.0, merged_streams=0)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+
+    assert sorted(tel.streams) == list(sids)
+    for t in range(n_threads):                  # every thread saw THE record
+        for i, rec in enumerate(seen[t]):
+            assert rec is tel.streams[sids[i % len(sids)]]
+    assert tel.topology_rollup()["topology_epochs"] == n_threads * per_thread
+
+
 def test_overlap_ratio_accounting():
     tel = FleetTelemetry()
     assert tel.overlap_ratio() == 0.0            # nothing recorded

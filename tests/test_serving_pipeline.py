@@ -224,46 +224,38 @@ def test_want_factors_off_metrics_and_dynamics(params):
     assert fn_off.want_factors is False and fn_on.want_factors is True
 
 
-def _time_scan_carry_avals(cfg, want_factors, C=5, S=3):
-    """Abstract values carried by run_chunk's outer (time) scan."""
+def test_want_factors_false_compiles_accumulators_out_of_scan():
+    """The acceptance assert: with want_factors=False the chunk scan's
+    jaxpr contains NO factor accumulator in its carry — not a zeroed one,
+    none. Since the static-analysis PR the scan-carry walk lives in the
+    shared ``no_factor_carries`` contract; the with-factors trace doubles
+    as its planted positive (both the unique [L, S, Kmax] pre accumulator
+    and the extra [L, S, N] post accumulator must be called out)."""
+    from repro import analysis
+
+    cfg = SNNConfig(n_in=48, n_hidden=16, n_layers=2, n_out=4, t_steps=8)
+    C, S = 5, 3
     params = init_params(jax.random.PRNGKey(2), cfg)
     st = init_stream_state(cfg, S)
     dl = init_stream_deltas(cfg, S)
     ev = jnp.zeros((C, S, cfg.n_in))
     va = jnp.ones((C, S), bool)
 
-    def f(p, d, s, e, v):
-        return run_chunk(p, d, s, e, v, cfg, want_factors=want_factors)
+    def fn(want_factors):
+        def f(p, d, s, e, v):
+            return run_chunk(p, d, s, e, v, cfg, want_factors=want_factors)
+        return f
 
-    jaxpr = jax.make_jaxpr(f)(params, dl, st, ev, va)
-    scans = [eqn for eqn in jaxpr.jaxpr.eqns
-             if eqn.primitive.name == "scan" and eqn.params["length"] == C]
-    assert len(scans) == 1, [e.primitive.name for e in jaxpr.jaxpr.eqns]
-    eqn = scans[0]
-    lo = eqn.params["num_consts"]
-    return [v.aval for v in eqn.invars[lo:lo + eqn.params["num_carry"]]]
+    contracts = [analysis.no_factor_carries(cfg, S, chunk_len=C)]
+    args = (params, dl, st, ev, va)
+    analysis.check(fn(False), args, contracts).raise_if_violations()
 
-
-def test_want_factors_false_compiles_accumulators_out_of_scan():
-    """The acceptance assert: with want_factors=False the chunk scan's
-    jaxpr contains NO factor accumulator in its carry — not a zeroed one,
-    none. (n_in != n_hidden so the [L, S, Kmax] pre accumulator's shape is
-    unique among carried arrays, and the with-factors carry is exactly two
-    arrays wider.)"""
-    cfg = SNNConfig(n_in=48, n_hidden=16, n_layers=2, n_out=4, t_steps=8)
-    L, S = cfg.n_layers, 3
-    with_f = _time_scan_carry_avals(cfg, True, S=S)
-    without = _time_scan_carry_avals(cfg, False, S=S)
-    assert len(with_f) == len(without) + 2
-    k_max = max(cfg.layer_fanins)
-    acc_shapes = {(L, S, k_max), (L, S, cfg.n_hidden)}
-    assert any(a.shape == (L, S, k_max) for a in with_f)
-    assert not any(a.shape in acc_shapes and a.shape == (L, S, k_max)
-                   for a in without)
-    # the post accumulator's [L, S, N] shape is shared with LayerState
-    # leaves, so pin it by count: exactly one more [L, S, N] with factors
-    n_lsn = lambda avals: sum(a.shape == (L, S, cfg.n_hidden) for a in avals)
-    assert n_lsn(with_f) == n_lsn(without) + 1
+    on = analysis.check(fn(True), args, contracts)
+    assert not on.ok
+    msgs = " ".join(v.message for v in on.violations)
+    L, k_max = cfg.n_layers, max(cfg.layer_fanins)
+    assert str([L, S, k_max]) in msgs            # pre accumulator caught
+    assert str([L, S, cfg.n_hidden]) in msgs     # extra post acc caught
 
 
 def test_live_topology_requires_factors(params):
