@@ -61,9 +61,10 @@ import numpy as np
 
 from repro.core.snn import SNNConfig, init_params
 from repro.data.events import make_task
-from repro.serving import (ArrivalConfig, FleetTelemetry, StreamScheduler,
-                           StreamSession, TaskStreamSource, TopologyService,
-                           TopologyServiceConfig)
+from repro.serving import (AERStreamSource, ArrivalConfig, AutopilotConfig,
+                           FleetTelemetry, IngestConfig, StreamScheduler,
+                           StreamSession, TaskStreamSource, TierConfig,
+                           TopologyService, TopologyServiceConfig)
 
 N_IN, N_HIDDEN, T_STEPS = 64, 64, 20
 CHUNK_LEN = 10
@@ -71,13 +72,20 @@ CHUNK_LEN = 10
 # printed by ``benchmarks.run --dryrun`` so the module's focused CLI modes
 # are discoverable (and their registration can't rot silently)
 CLI_FLAGS = ("--devices N | --evolve EVERY | --pipeline on|off "
-             "| --factors on|off | --density quick|full")
+             "| --factors on|off | --density quick|full "
+             "| --tiers on|off --adaptive on|off [--json PATH]")
+
+# the QoS A/B's traffic: AER-packed chunks (real decode cost at poll) on
+# jittered Poisson arrivals — the shape async ingestion is for
+QOS_ARRIVAL = ArrivalConfig(min_chunk=3, max_chunk=CHUNK_LEN + 3,
+                            mean_gap_s=1e-3, start_jitter_s=0.01)
 
 
 def _drive(n_streams: int, n_slots: int, n_windows: int, seed: int = 0,
            mesh=None, evolve_every: int = 0, merge_top: int = 2,
            pipeline: int = 0, want_factors=None, tracer=None,
-           sparsity=None, compact=None):
+           sparsity=None, compact=None, ingest=None, autopilot=None,
+           tiers=None, tier_of=None, aer: bool = False, arrival=None):
     cfg = SNNConfig(n_in=N_IN, n_hidden=N_HIDDEN, n_layers=2, n_out=10,
                     t_steps=T_STEPS,
                     **({} if sparsity is None else {"sparsity": sparsity}))
@@ -90,14 +98,18 @@ def _drive(n_streams: int, n_slots: int, n_windows: int, seed: int = 0,
     sched = StreamScheduler(params, cfg, n_slots=n_slots, chunk_len=CHUNK_LEN,
                             mesh=mesh, topology=topo, pipeline_depth=pipeline,
                             want_factors=want_factors, tracer=tracer,
-                            compact=compact)
-    arrival = ArrivalConfig(min_chunk=4, max_chunk=CHUNK_LEN, mean_gap_s=1e-4)
+                            compact=compact, ingest=ingest,
+                            autopilot=autopilot, tiers=tiers)
+    arrival = arrival or ArrivalConfig(min_chunk=4, max_chunk=CHUNK_LEN,
+                                       mean_gap_s=1e-4)
+    Source = AERStreamSource if aer else TaskStreamSource
     for sid in range(n_streams):
         sched.submit(StreamSession(
             sid=sid,
-            source=TaskStreamSource(task, n_windows=n_windows, seed=sid,
-                                    arrival=arrival)))
-    sched.step()                     # warmup step compiles the grid
+            source=Source(task, n_windows=n_windows, seed=sid,
+                          arrival=arrival)),
+            tier=tier_of(sid) if tier_of is not None else None)
+    sched.step()                     # warmup step compiles the grid(s)
     sched.flush()                    # ...and lands its bookkeeping (pipeline)
     compiles_after_warmup = sched.n_compiles
     # measured window excludes warmup on both sides of the rate: fresh
@@ -105,6 +117,7 @@ def _drive(n_streams: int, n_slots: int, n_windows: int, seed: int = 0,
     # (topology epochs keep counting in the service itself)
     sched.telemetry = FleetTelemetry()
     done = sched.run_until_drained()
+    sched.close()                    # stop the ingest worker, if any
     assert len(done) == n_streams, (len(done), n_streams)
     assert compiles_after_warmup == 1 and sched.n_compiles == 1, \
         f"slot-grid step recompiled: {sched.n_compiles} variants"
@@ -169,6 +182,7 @@ def run(quick: bool = True):
     rows += run_evolve(quick=quick, frozen=frozen_baseline)
     rows += run_ab(quick=quick)
     rows += run_density(quick=True, densities=[0.2])
+    rows += run_qos(quick=True)
     return rows
 
 
@@ -253,6 +267,121 @@ def run_ab(quick: bool = True, pipeline: bool = True, factors: bool = False):
                     f" compiles={conf.n_compiles}"),
         **_row_extras(conf),
     }]
+
+
+# ---------------------------------------------------------------------------
+# --tiers / --adaptive: QoS tiers + async ingestion + adaptive depth A/B
+# ---------------------------------------------------------------------------
+
+def run_qos(quick: bool = True, tiers: bool = True, adaptive: bool = True):
+    """Three-way A/B on jittered AER traffic (decode cost at every poll):
+
+    * ``qos_base`` — the single-grid serial reference: inline polling,
+      pipeline depth 0;
+    * ``qos_async`` — async ingest worker plus (``adaptive=on``) the
+      depth autopilot, same single grid; ``rel`` >= 1.0 means moving
+      decode off the critical path and deepening under a host-bound
+      signal bought fleet throughput;
+    * ``qos_tiers`` — the same fleet split over an ``interactive``
+      (short-chunk) and a ``bulk`` (long-chunk) grid, ingest + autopilot
+      on; reports per-tier p50/p99, the chosen-depth timeline, and
+      interactive p99 against the single-grid baseline's p99.
+
+    Trajectories are bit-identical across all three (pinned in
+    tests/test_serving_qos.py) — this measures wall-clock shape only.
+    """
+    n_streams, n_slots, n_windows = (8, 8, 2) if quick else (32, 16, 4)
+    kw = dict(aer=True, arrival=QOS_ARRIVAL)
+    ap_cfg = AutopilotConfig(decide_every=2, hold_steps=4, warmup_obs=1) \
+        if adaptive else None
+
+    base = _drive(n_streams, n_slots, n_windows, **kw)
+    rb = base.telemetry.rollup()
+    rows = [{
+        "name": f"serving/qos_base_streams{n_streams}",
+        "us_per_call": rb["p50_ms"] * 1e3,
+        "derived": (f"events/s={rb['events_per_s']:.0f}"
+                    f" p99_ms={rb['p99_ms']:.2f}"
+                    f" {_phase_str(base.telemetry)}"
+                    f" compiles={base.n_compiles}"),
+        **_row_extras(base),
+    }]
+
+    asyn = _drive(n_streams, n_slots, n_windows, ingest=IngestConfig(),
+                  autopilot=ap_cfg, pipeline=0 if adaptive else 1, **kw)
+    ra = asyn.telemetry.rollup()
+    rel = ra["events_per_s"] / rb["events_per_s"] \
+        if rb["events_per_s"] else 0.0
+    timeline = (list(map(list, asyn.autopilot.timeline))
+                if asyn.autopilot is not None else [])
+    row = {
+        "name": (f"serving/qos_async_"
+                 f"{'adaptive' if adaptive else 'fixed'}"
+                 f"_streams{n_streams}"),
+        "us_per_call": ra["p50_ms"] * 1e3,
+        "derived": (f"events/s={ra['events_per_s']:.0f}"
+                    f" baseline_events/s={rb['events_per_s']:.0f}"
+                    f" rel={rel:.2f}"
+                    f" depth={ra['pipeline_depth']:.0f}"
+                    f" depth_changes={ra['depth_changes']}"
+                    f" ingest_chunks={ra['ingest_chunks']}"
+                    f" overlap={ra['overlap_ratio']:.2f}"
+                    f" compiles={asyn.n_compiles}"),
+        **_row_extras(asyn),
+    }
+    row["metrics"].update(baseline_events_per_s=rb["events_per_s"],
+                          baseline_p99_ms=rb["p99_ms"], rel=rel,
+                          depth_timeline=timeline,
+                          depth_changes=ra["depth_changes"],
+                          ingest_chunks=ra["ingest_chunks"],
+                          ingest_queue_peak=ra["ingest_queue_peak"])
+    rows.append(row)
+
+    if not tiers:
+        return rows
+    half = max(2, n_slots // 2)
+    tier_cfgs = [TierConfig("interactive", chunk_len=4, n_slots=half),
+                 TierConfig("bulk", chunk_len=CHUNK_LEN + 6, n_slots=half)]
+    tiered = _drive(n_streams, n_slots, n_windows, tiers=tier_cfgs,
+                    tier_of=lambda sid: "interactive" if sid % 2 else "bulk",
+                    ingest=IngestConfig(), autopilot=ap_cfg,
+                    pipeline=0 if adaptive else 1, **kw)
+    rt = tiered.telemetry.rollup()
+    lat = tiered.telemetry.tier_percentiles()
+    rel_t = rt["events_per_s"] / rb["events_per_s"] \
+        if rb["events_per_s"] else 0.0
+    int_p99 = lat.get("interactive", {}).get("p99_ms", 0.0)
+    bulk_p99 = lat.get("bulk", {}).get("p99_ms", 0.0)
+    timeline = (list(map(list, tiered.autopilot.timeline))
+                if tiered.autopilot is not None else [])
+    row = {
+        "name": f"serving/qos_tiers_streams{n_streams}",
+        "us_per_call": rt["p50_ms"] * 1e3,
+        "derived": (f"events/s={rt['events_per_s']:.0f}"
+                    f" baseline_events/s={rb['events_per_s']:.0f}"
+                    f" rel={rel_t:.2f}"
+                    f" interactive_p99_ms={int_p99:.2f}"
+                    f" bulk_p99_ms={bulk_p99:.2f}"
+                    f" baseline_p99_ms={rb['p99_ms']:.2f}"
+                    f" depth_changes={rt['depth_changes']}"
+                    f" ingest_chunks={rt['ingest_chunks']}"
+                    f" compiles={tiered.n_compiles}"),
+        **_row_extras(tiered),
+    }
+    row["metrics"].update(baseline_events_per_s=rb["events_per_s"],
+                          baseline_p99_ms=rb["p99_ms"], rel=rel_t,
+                          tier_interactive_p50_ms=lat.get(
+                              "interactive", {}).get("p50_ms", 0.0),
+                          tier_interactive_p99_ms=int_p99,
+                          tier_bulk_p50_ms=lat.get("bulk", {}).get(
+                              "p50_ms", 0.0),
+                          tier_bulk_p99_ms=bulk_p99,
+                          depth_timeline=timeline,
+                          depth_changes=rt["depth_changes"],
+                          ingest_chunks=rt["ingest_chunks"],
+                          ingest_queue_peak=rt["ingest_queue_peak"])
+    rows.append(row)
+    return rows
 
 
 # ---------------------------------------------------------------------------
@@ -373,30 +502,42 @@ if __name__ == "__main__":
                     help="A/B the compact delta layout against the dense "
                          "baseline across N:M densities (events/s + "
                          "measured bytes held)")
+    ap.add_argument("--tiers", choices=["on", "off"], default=None,
+                    help="A/B QoS tiers (interactive + bulk chunk grids) "
+                         "against the single-grid baseline on jittered "
+                         "AER traffic")
+    ap.add_argument("--adaptive", choices=["on", "off"], default=None,
+                    help="enable the occupancy-driven pipeline-depth "
+                         "autopilot in the QoS A/B (off: fixed depth 1)")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write the rows as a repro-bench/1 artifact")
     ap.add_argument("--_child", type=int, default=0, help=argparse.SUPPRESS)
     args = ap.parse_args()
+    rows = None
     if args._child:
         _child_one_device_count(args._child)
+    elif args.tiers is not None or args.adaptive is not None:
+        rows = run_qos(quick=True, tiers=(args.tiers != "off"),
+                       adaptive=(args.adaptive != "off"))
     elif args.density:
-        print("name,us_per_call,derived")
-        for row in run_density(quick=(args.density == "quick")):
-            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+        rows = run_density(quick=(args.density == "quick"))
     elif args.devices:
-        print("name,us_per_call,derived")
-        for row in run_devices_sweep(args.devices):
-            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+        rows = run_devices_sweep(args.devices)
     elif args.evolve:
-        print("name,us_per_call,derived")
-        for row in run_evolve(quick=False, every=args.evolve):
-            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+        rows = run_evolve(quick=False, every=args.evolve)
     elif args.pipeline is not None or args.factors is not None:
-        print("name,us_per_call,derived")
         # unspecified halves stay at the baseline setting, so each flag can
         # be A/B'd in isolation or combined (--pipeline on --factors off)
-        for row in run_ab(quick=False,
-                          pipeline=(args.pipeline == "on"),
-                          factors=(args.factors != "off")):
-            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+        rows = run_ab(quick=False,
+                      pipeline=(args.pipeline == "on"),
+                      factors=(args.factors != "off"))
     else:
         for row in run(quick=True):
             print(row)
+    if rows is not None:
+        print("name,us_per_call,derived")
+        for row in rows:
+            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+        if args.json:
+            from benchmarks.run import write_artifact
+            write_artifact(args.json, rows)

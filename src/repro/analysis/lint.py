@@ -139,11 +139,21 @@ class HiddenSyncRule(Rule):
     SCOPE = ("src/repro/serving/scheduler.py", "src/repro/serving/staging.py",
              "src/repro/serving/session.py",
              "src/repro/serving/stream_source.py",
+             "src/repro/serving/ingest.py",
+             "src/repro/serving/autopilot.py",
              "src/repro/launch/batching.py")
-    # stage/poll/dispatch-phase functions: must never wait on the device
+    # stage/poll/dispatch-phase functions: must never wait on the device.
+    # The ingest worker's drain path (drain/_poll_one/_poll_round/attach/
+    # detach/has_pending) and the depth autopilot's evaluation path
+    # (decide/observe/_apply_autopilot) run on or gate the stage critical
+    # path — a hidden sync there stalls the grid exactly like one in
+    # _stage_body would
     HOT_FUNCS = {"step", "submit", "push", "pop", "push_events", "pop_chunk",
                  "poll", "_stage", "_stage_body", "_poll_sources", "_admit",
-                 "_dispatch", "_feed_tokens", "_replace_lanes", "tick"}
+                 "_dispatch", "_feed_tokens", "_replace_lanes", "tick",
+                 "drain", "_poll_one", "_poll_round", "attach", "detach",
+                 "has_pending", "decide", "observe", "_apply_autopilot",
+                 "set_depth"}
     # names that (by repo convention) hold device arrays in these modules
     DEVICE_HINTS = ("deltas", "state", "metrics", "logits", "pre_mag",
                     "post_mag", "cache", "wc")
@@ -308,7 +318,8 @@ class UnlockedMutationRule(Rule):
 
     def applies(self, path: str) -> bool:
         return (path.startswith("src/repro/obs/")
-                or path == "src/repro/serving/telemetry.py")
+                or path == "src/repro/serving/telemetry.py"
+                or path == "src/repro/serving/ingest.py")
 
     def check(self, mod: Module) -> Iterator[LintViolation]:
         if mod.tree is None:
@@ -393,7 +404,7 @@ class UnlockedMutationRule(Rule):
                 return f"self.{t.value.attr}[...]"
             return None
 
-        for sub in ast.walk(node):
+        for sub in self._depth1(node):
             if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 continue
             if isinstance(sub, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
@@ -411,6 +422,25 @@ class UnlockedMutationRule(Rule):
                 if d:
                     yield (f"{d}.{sub.func.attr}()", sub.lineno)
 
+    @staticmethod
+    def _depth1(node: ast.AST) -> Iterator[ast.AST]:
+        """Like ``ast.walk`` but stops at child statement bodies —
+        ``_walk`` visits those itself with lock tracking, so a
+        ``with self._lock:`` nested in a loop/try is honored instead of
+        its contents being flagged (and double-counted) via the
+        enclosing compound statement."""
+        stack = [node]
+        while stack:
+            sub = stack.pop()
+            yield sub
+            for field, value in ast.iter_fields(sub):
+                if field in ("body", "orelse", "finalbody", "handlers"):
+                    continue
+                if isinstance(value, ast.AST):
+                    stack.append(value)
+                elif isinstance(value, list):
+                    stack.extend(v for v in value if isinstance(v, ast.AST))
+
 
 @register_rule
 class HostOnlyImportRule(Rule):
@@ -423,6 +453,8 @@ class HostOnlyImportRule(Rule):
     SCOPE_FILES = ("src/repro/serving/telemetry.py",
                    "src/repro/serving/staging.py",
                    "src/repro/serving/stream_source.py",
+                   "src/repro/serving/ingest.py",
+                   "src/repro/serving/autopilot.py",
                    "src/repro/analysis/lint.py")
 
     def applies(self, path: str) -> bool:

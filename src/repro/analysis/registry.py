@@ -70,43 +70,48 @@ def _snn_cfg():
     return SNNConfig(n_in=32, n_hidden=32, n_layers=2, n_out=8, t_steps=8)
 
 
-def _snn_inputs(cfg, *, compact: bool):
+def _snn_inputs(cfg, *, compact: bool, chunk_len: int = _C,
+                n_slots: int = _S):
     import jax
     import jax.numpy as jnp
     import numpy as np
     from repro.core import snn
 
     params = snn.init_params(jax.random.PRNGKey(0), cfg)
-    deltas = snn.init_stream_deltas(cfg, _S, compact=compact)
-    state = snn.init_stream_state(cfg, _S)
+    deltas = snn.init_stream_deltas(cfg, n_slots, compact=compact)
+    state = snn.init_stream_state(cfg, n_slots)
     rng = np.random.default_rng(0)
-    events = jnp.asarray(rng.random((_C, _S, cfg.n_in)) < 0.25, jnp.float32)
-    valid = jnp.ones((_C, _S), bool)
-    amask = jnp.ones((_S,), bool)
+    events = jnp.asarray(
+        rng.random((chunk_len, n_slots, cfg.n_in)) < 0.25, jnp.float32)
+    valid = jnp.ones((chunk_len, n_slots), bool)
+    amask = jnp.ones((n_slots,), bool)
     return params, deltas, state, events, valid, amask
 
 
-def _chunk_entry(*, mesh=None, want_factors: bool, compact: bool):
+def _chunk_entry(*, mesh=None, want_factors: bool, compact: bool,
+                 chunk_len: int = _C, n_slots: int = _S):
     from repro.core import snn
     from repro.serving.adapt import AdaptConfig, make_chunk_fn
 
     cfg = _snn_cfg()
     params, deltas, state, events, valid, amask = _snn_inputs(
-        cfg, compact=compact)
+        cfg, compact=compact, chunk_len=chunk_len, n_slots=n_slots)
     exec_params = snn.serving_params(params, cfg) if compact else params
     fn = make_chunk_fn(cfg, AdaptConfig(), mesh=mesh,
                        want_factors=want_factors)
     contracts = [
         jc.no_collectives(),
         jc.slot_separable(
-            _S, exempt=(".pre_mag", ".post_mag") if want_factors else ()),
+            n_slots,
+            exempt=(".pre_mag", ".post_mag") if want_factors else ()),
         jc.dtype_discipline(),
         jc.compile_count(),
     ]
     if compact:
-        contracts += [jc.mask_free(cfg), jc.no_dense_deltas(cfg, _S)]
+        contracts += [jc.mask_free(cfg), jc.no_dense_deltas(cfg, n_slots)]
     if not want_factors:
-        contracts += [jc.no_factor_carries(cfg, _S, chunk_len=_C)]
+        contracts += [jc.no_factor_carries(cfg, n_slots,
+                                           chunk_len=chunk_len)]
     return fn, (exec_params, deltas, state, events, valid, amask), \
         contracts, None
 
@@ -133,6 +138,24 @@ def _chunk_dense():
     """The dense-fallback A/B layout (no mask-free claim, but the
     zero-collective / slot-separable / compile-once contracts still bind)."""
     return _chunk_entry(want_factors=True, compact=False)
+
+
+@register("serving.chunk_fn[tier=interactive]")
+def _chunk_tier_interactive():
+    """The interactive QoS tier's geometry: a short chunk grid (small
+    chunk_len bounds per-window latency). Same compact exec rep and
+    contract set as the default hot path — the tiers differ only in
+    trace-time shape, never in program structure."""
+    return _chunk_entry(want_factors=True, compact=True,
+                        chunk_len=3, n_slots=4)
+
+
+@register("serving.chunk_fn[tier=bulk]")
+def _chunk_tier_bulk():
+    """The bulk QoS tier's geometry: a long chunk grid (large chunk_len
+    amortizes dispatch overhead for throughput streams)."""
+    return _chunk_entry(want_factors=True, compact=True,
+                        chunk_len=12, n_slots=4)
 
 
 @register("serving.chunk_fn[sharded]")

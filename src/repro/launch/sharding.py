@@ -246,6 +246,17 @@ def round_up_slots(n_slots: int, mesh: Mesh) -> int:
     return -(-n_slots // d) * d
 
 
+def tier_slot_allocation(counts, mesh: Mesh) -> list:
+    """Device-aware slot widths for a multi-tier grid: each tier's
+    requested slot count is padded to a multiple of the slot-mesh size
+    (every device owns an equal shard of every tier) and floored at two
+    slots per device (below that XLA:CPU's gemv path changes the
+    K-reduction order and costs bit-identity with 1-device) — the same
+    rule the single-grid scheduler has always applied, per tier."""
+    floor = 2 * slot_devices(mesh)
+    return [max(round_up_slots(int(n), mesh), floor) for n in counts]
+
+
 def check_slot_divisible(n_slots: int, mesh: Mesh) -> None:
     d = slot_devices(mesh)
     if n_slots % d != 0:

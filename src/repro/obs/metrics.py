@@ -53,6 +53,9 @@ def linear_buckets(lo: float, hi: float, n: int) -> Tuple[float, ...]:
 LATENCY_BUCKETS_S = log_buckets(1e-6, 60.0, per_decade=24)
 # per-step host/device overlap ratio lives in [0, 1]
 RATIO_BUCKETS = linear_buckets(0.0, 1.0, 50)
+# bounded-queue occupancy (e.g. chunks drained per ingest poll window);
+# capacities are small integers, so 4-wide linear buckets to 128 suffice
+QUEUE_DEPTH_BUCKETS = linear_buckets(0.0, 128.0, 32)
 
 
 class Counter:

@@ -50,12 +50,17 @@ class StreamSession:
     n_in: Optional[int] = None              # event width; learned on first
     #   push, or stamped by the scheduler at submit — keeps pop_chunk's
     #   empty result a well-shaped [0, n_in] (not a [0, 0] broadcast trap)
+    tier: Optional[str] = None              # QoS tier; resolved at submit
     status: SessionStatus = SessionStatus.QUEUED
     slot: Optional[int] = None
     timesteps_fed: int = 0
     predictions: List[WindowPrediction] = dataclasses.field(default_factory=list)
     # buffered events that arrived but have not been stepped yet
     _pending: List[np.ndarray] = dataclasses.field(default_factory=list)
+    # the IngestWorker holding this session's queued-but-undrained chunks
+    # (set by IngestWorker.attach, cleared at detach); consulted by
+    # ``exhausted`` so lookahead polling cannot retire a stream early
+    _ingest: Any = None
     # per-stream snapshot of deltas captured at retire (for inspection or
     # for promoting a stream's adaptation into the shared base); stacked in
     # the fleet's delta layout — compact [n_layers, J, T, bk, bo] on the
@@ -97,9 +102,20 @@ class StreamSession:
 
     @property
     def exhausted(self) -> bool:
-        """True when the source has ended and no buffered events remain."""
+        """True when the source has ended and no buffered events remain —
+        neither here in ``_pending`` nor queued in the ingest worker.
+
+        The ingest check closes the EOS-exactly-once hole async polling
+        opens: the worker polls ahead of the grid, so ``source.exhausted``
+        can flip while the tail chunk still sits in the worker's queue
+        (stamped for a future tick). Without it the scheduler would
+        retire the session that step and the tail would never be fed
+        (the lost-tail / double-retire regression in
+        tests/test_serving_qos.py).
+        """
         src_done = self.source is None or self.source.exhausted
-        return src_done and not self._pending
+        queued = self._ingest is not None and self._ingest.has_pending(self.sid)
+        return src_done and not queued and not self._pending
 
 
 # ---------------------------------------------------------------------------

@@ -115,6 +115,21 @@ class StagingPipeline:
         self.depth = depth
         self._q: Deque[InFlight] = deque()
 
+    def set_depth(self, depth: int) -> None:
+        """Resize the pipeline at a drain-safe boundary (the adaptive-depth
+        autopilot's apply point). Refuses while steps are in flight —
+        shrinking under a loaded queue would strand bookkeeping, and the
+        bit-identity argument for adaptive depth rests on every resize
+        happening against an empty pipeline (flush first)."""
+        if depth < 0:
+            raise ValueError(f"pipeline depth must be >= 0, got {depth}")
+        if self._q:
+            raise RuntimeError(
+                f"cannot resize with {len(self._q)} step(s) in flight — "
+                "flush the pipeline first (depth changes land only at "
+                "drain-safe boundaries)")
+        self.depth = depth
+
     def __len__(self) -> int:
         return len(self._q)
 

@@ -44,6 +44,11 @@ class ReplaySource:
         """True once every replayed timestep has been released."""
         return self._cursor >= self._events.shape[0]
 
+    @property
+    def n_timesteps(self) -> int:
+        """Total timesteps this source will deliver over its lifetime."""
+        return int(self._events.shape[0])
+
     def poll(self, now: float) -> List[np.ndarray]:
         """Release the next ``chunk_len`` timesteps as one ``[c, n_in]``
         chunk (ignores ``now`` — replay is clock-independent)."""
@@ -94,5 +99,69 @@ class TaskStreamSource:
         while (self._next < len(self._chunks)
                and self._chunks[self._next][0] <= now):
             out.append(self._chunks[self._next][1])
+            self._next += 1
+        return out
+
+
+# ---------------------------------------------------------------------------
+# address-event representation (AER) — packed chunks with a real decode cost
+# ---------------------------------------------------------------------------
+
+def aer_encode(chunk: np.ndarray):
+    """Pack a dense ``[c, n_in]`` binary spike chunk as address events:
+    ``(c, n_in, t_idx, k_idx)`` with one ``(t, k)`` address pair per
+    spike — the wire format an event camera or ElfCore's async SerDes
+    front-end actually ships (nonzero entries are treated as spikes)."""
+    t, k = np.nonzero(chunk)
+    return (int(chunk.shape[0]), int(chunk.shape[1]),
+            t.astype(np.int32), k.astype(np.int32))
+
+
+def aer_decode(c: int, n_in: int, t: np.ndarray, k: np.ndarray) -> np.ndarray:
+    """Densify one AER-packed chunk back to ``[c, n_in]`` f32 spikes —
+    the per-chunk decode work a real event front-end pays at ingest."""
+    out = np.zeros((c, n_in), np.float32)
+    out[t, k] = 1.0
+    return out
+
+
+class AERStreamSource:
+    """A :class:`TaskStreamSource` whose chunks are stored address-event
+    packed and densified at ``poll`` time.
+
+    Same seeded arrival schedule, chunk cuts and labels as a
+    ``TaskStreamSource(task, n_windows, seed, arrival)`` — the two are
+    poll-for-poll identical (pinned in tests/test_serving_qos.py) — but
+    each poll pays a genuine decode cost.  Polled inline that cost lands
+    in the stage phase and stalls the grid; behind the ingest worker it
+    runs off the critical path — this source is what makes the async-
+    ingestion A/B in ``bench_serving_streams`` measure a real win rather
+    than a bookkeeping shuffle.  Spikes are binary, so the encode/decode
+    round trip is exact and determinism is untouched.
+    """
+
+    def __init__(self, task: EventTask, n_windows: int, seed: int = 0,
+                 arrival: ArrivalConfig | None = None):
+        inner = TaskStreamSource(task, n_windows, seed=seed, arrival=arrival)
+        self.labels = inner.labels
+        self._packed = [(t, aer_encode(c)) for t, c in inner._chunks]
+        self._next = 0
+
+    @property
+    def exhausted(self) -> bool:
+        """True once every packed chunk has arrived and been polled."""
+        return self._next >= len(self._packed)
+
+    @property
+    def n_timesteps(self) -> int:
+        """Total timesteps this source will deliver over its lifetime."""
+        return sum(c for _, (c, _n, _t, _k) in self._packed)
+
+    def poll(self, now: float) -> List[np.ndarray]:
+        """Densified chunks whose arrival time is <= ``now``."""
+        out = []
+        while (self._next < len(self._packed)
+               and self._packed[self._next][0] <= now):
+            out.append(aer_decode(*self._packed[self._next][1]))
             self._next += 1
         return out
